@@ -1,0 +1,36 @@
+"""Fig. 7 reproduction: AMG triple-product SpGEMMs, weak scaling.
+
+Paper: 27-pt model problem A@P and P^T@(AP), seven parallelizations + the
+geometric 1D baselines.  Weak scaling keeps rows/processor roughly constant;
+our reduced sizes pair (n=9, p=8), (n=12, p=27), (n=15, p=64).
+Expected qualitative result (Sec. 6.1): row-wise nearly optimal for A@P;
+outer-product (and the 2D refinements monoA/monoB) nearly optimal for PTAP
+with ~an order of magnitude gap to row-wise/monoC.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, run_cell, run_geometric_cell
+from repro.core.matrices import amg_instances, geometric_row_partition
+from repro.core.spgemm_models import MODELS
+
+WEAK = [(9, 8), (12, 27)]
+WEAK_FULL = [(9, 8), (12, 27), (15, 64)]
+
+
+def run(out_dir=None, quick=False, flavor="model"):
+    pairs = WEAK if quick else WEAK_FULL
+    models = ("rowwise", "outer", "monoC") if quick else MODELS
+    records = []
+    for n, p in pairs:
+        ap, ptap = amg_instances(n, flavor=flavor)
+        for inst, kind in ((ap, "AP"), (ptap, "PTAP")):
+            for model in models:
+                records.append(run_cell(inst, model, p, eps=0.10))
+        # geometric baselines: row-wise on A rows (AP); outer on fine points (PTAP)
+        geo = geometric_row_partition(n, p)
+        records.append(run_geometric_cell(ap, "rowwise", p, geo, "geometric-row"))
+        records.append(run_geometric_cell(ptap, "outer", p, geo, "geometric-outer"))
+    emit(records, out_dir, f"amg_{flavor}.json")
+    return records

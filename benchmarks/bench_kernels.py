@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness,
+not speed); throughput numbers that matter for the roofline come from the
+dry-run cost analysis.  Here we time the jitted XLA reference paths (real
+compiled CPU code) and the interpret-mode kernels for completeness.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops
+from repro.sparse.bsr import to_bsr
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(out_dir=None, quick=False):
+    records = []
+    rng = np.random.default_rng(0)
+    block = 16
+    m = k = n = 128 if quick else 256
+    gm, gk = m // block, k // block
+    mask = np.kron(rng.random((gm, gk)) < 0.3, np.ones((block, block), bool))
+    a = rng.standard_normal((m, k)).astype(np.float32) * mask
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    bsr = to_bsr(a, block, block)
+
+    us_ref = _time(
+        jax.jit(
+            lambda blocks, brows, bcols, dense: ops.bsr_spmm_ref(
+                blocks, brows, bcols, dense, gm
+            )
+        ),
+        jnp.asarray(bsr.blocks),
+        jnp.asarray(bsr.brows),
+        jnp.asarray(bsr.bcols),
+        jnp.asarray(b),
+    )
+    records.append(
+        {
+            "name": "kernels/bsr_spmm/xla_ref",
+            "status": "ok",
+            "us_per_call": int(us_ref),
+            "nnz_blocks": bsr.n_blocks,
+        }
+    )
+    t0 = time.time()
+    ops.spmm(bsr, b, interpret=True)
+    records.append(
+        {
+            "name": "kernels/bsr_spmm/pallas_interpret",
+            "status": "ok",
+            "us_per_call": int((time.time() - t0) * 1e6),
+            "note": "interpret mode: correctness path, not TPU speed",
+        }
+    )
+
+    E, C, d, f = (4, 64, 64, 64) if quick else (8, 256, 256, 256)
+    x = rng.standard_normal((E, C, d)).astype(np.float32)
+    w = rng.standard_normal((E, d, f)).astype(np.float32)
+    us = _time(jax.jit(ops.moe_gemm_ref), jnp.asarray(x), jnp.asarray(w))
+    records.append(
+        {
+            "name": "kernels/moe_gemm/xla_ref",
+            "status": "ok",
+            "us_per_call": int(us),
+            "gflop": round(2 * E * C * d * f / 1e9, 3),
+        }
+    )
+    emit(records, out_dir, "kernels.json")
+    return records

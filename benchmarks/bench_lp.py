@@ -1,0 +1,28 @@
+"""Fig. 8 reproduction: LP normal equations A D^2 A^T, strong scaling.
+
+S_B = S_A^T, so column-wise == row-wise and monoB == monoA (paper Sec. 6.2 —
+those curves are omitted).  Expected qualitative result: fine-grained ~
+outer-product ~ monoA are most communication-efficient; row-wise and monoC
+the least (up to ~23x), and 2D gives little advantage over outer-product.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_cell
+from repro.core.matrices import lp_instance
+
+INSTANCES = ["fome21", "pds80", "pds100", "cont11l", "sgpf5y6"]
+MODELS = ("rowwise", "outer", "monoA", "monoC", "fine")
+
+
+def run(out_dir=None, quick=False):
+    names = INSTANCES[:2] if quick else INSTANCES
+    ps = (16,) if quick else (4, 16, 64)
+    scale = 0.02 if quick else 0.05
+    records = []
+    for name in names:
+        inst = lp_instance(name, scale=scale)
+        for p in ps:
+            for model in MODELS:
+                records.append(run_cell(inst, model, p, eps=0.10))
+    emit(records, out_dir, "lp.json")
+    return records

@@ -1,0 +1,34 @@
+"""Tab. II reproduction: instance statistics at our reduced scales."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.matrices import amg_instances, lp_instance, mcl_instance
+
+
+def run(out_dir=None, quick=False):
+    records = []
+    insts = []
+    n = 9 if quick else 12
+    insts += list(amg_instances(n))
+    if not quick:
+        insts += list(amg_instances(9, flavor="sa_rho"))
+    insts += [lp_instance("fome21", scale=0.02 if quick else 0.05)]
+    insts += [mcl_instance("facebook", scale=0.06 if quick else 0.12)]
+    if not quick:
+        insts += [
+            lp_instance("sgpf5y6", scale=0.05),
+            mcl_instance("dip", scale=0.5),
+            mcl_instance("roadnetca", scale=0.5),
+        ]
+    for inst in insts:
+        s = inst.stats()
+        records.append(
+            {
+                "name": f"tab2/{inst.name}",
+                "status": "ok",
+                "us_per_call": 0,
+                **{k: (round(v, 2) if isinstance(v, float) else v) for k, v in s.items()},
+            }
+        )
+    emit(records, out_dir, "tab2.json")
+    return records

@@ -1,0 +1,105 @@
+"""Shared benchmark machinery: run (instance x model x p) cells, emit CSV
+rows ``name,us_per_call,derived`` and JSON records.
+
+Scale note (DESIGN.md): instances are generated at reduced size so the
+pure-Python partitioner finishes in-container; the sweep *shapes* (weak/
+strong scaling, model sets, balance constraint eps=0.01-0.10) follow the
+paper.  Hypergraphs above ``pin_cap`` pins are skipped with a note, mirroring
+the paper's own partitioner OOM rows (Sec. 6.1).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import SpGEMMInstance, build_model, evaluate, partition, partition_random
+
+PIN_CAP = 4_000_000
+
+
+def run_cell(
+    inst: SpGEMMInstance,
+    model: str,
+    p: int,
+    eps: float = 0.10,
+    seed: int = 0,
+    pin_cap: int = PIN_CAP,
+    parts_override: np.ndarray | None = None,
+    tag: str = "",
+) -> dict:
+    name = f"{inst.name}/{model}/p{p}{tag}"
+    t0 = time.time()
+    hg = build_model(inst, model) if model != "geometric" else None
+    build_s = time.time() - t0
+    if hg is not None and hg.n_pins > pin_cap:
+        return {
+            "name": name,
+            "status": "skipped",
+            "reason": f"pins {hg.n_pins} > cap {pin_cap}",
+        }
+    t0 = time.time()
+    if parts_override is not None:
+        parts = parts_override
+        conn = None
+    else:
+        res = partition(hg, p, eps=eps, seed=seed)
+        parts = res.parts
+    part_s = time.time() - t0
+    costs = evaluate(hg, parts, p)
+    rand = partition_random(hg, p, seed=seed)
+    return {
+        "name": name,
+        "status": "ok",
+        "us_per_call": int(part_s * 1e6),
+        "build_s": round(build_s, 2),
+        "partition_s": round(part_s, 2),
+        "n_vertices": hg.n_vertices,
+        "n_nets": hg.n_nets,
+        "n_pins": hg.n_pins,
+        "max_part_cost": int(costs.max_part_cost),
+        "total_volume": int(costs.total_volume),
+        "connectivity": int(costs.connectivity),
+        "expand": int(costs.expand),
+        "fold": int(costs.fold),
+        "comp_imbalance": round(costs.comp_imbalance, 4),
+        "random_connectivity": int(rand.connectivity),
+    }
+
+
+def run_geometric_cell(inst, model: str, p: int, parts: np.ndarray, tag: str) -> dict:
+    """Evaluate a geometric (non-partitioner) baseline on a model hypergraph."""
+    hg = build_model(inst, model)
+    costs = evaluate(hg, parts, p)
+    return {
+        "name": f"{inst.name}/{tag}/p{p}",
+        "status": "ok",
+        "us_per_call": 0,
+        "max_part_cost": int(costs.max_part_cost),
+        "total_volume": int(costs.total_volume),
+        "connectivity": int(costs.connectivity),
+        "comp_imbalance": round(costs.comp_imbalance, 4),
+    }
+
+
+def emit(records: list[dict], out_dir: str | None, fname: str) -> None:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(records, f, indent=1)
+
+
+def csv_lines(records: list[dict]) -> list[str]:
+    skip_keys = {"name", "status", "us_per_call", "build_s", "partition_s"}
+    out = []
+    for r in records:
+        if r["status"] != "ok":
+            out.append(f"{r['name']},-1,{r.get('reason', 'skipped')}")
+            continue
+        derived = ";".join(
+            f"{k}={v}" for k, v in r.items() if k not in skip_keys
+        )
+        out.append(f"{r['name']},{r.get('us_per_call', 0)},{derived}")
+    return out

@@ -1,0 +1,113 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--dryrun-dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyze_record, PEAK_FLOPS
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(dryrun_dir: str, only_base: bool = True) -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if only_base and rec.get("opts"):
+            continue
+        name = f"{rec['arch']} × {rec['shape']} × {rec['mesh']}"
+        if rec.get("status") == "skipped":
+            rows.append(f"| {name} | skip | {rec.get('reason','')[:58]} | | | |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {name} | FAIL | {rec.get('error','')[:58]} | | | |")
+            continue
+        mem = rec.get("memory", {})
+        cols = rec.get("collectives", {})
+        col_str = " ".join(
+            f"{k.replace('all-','a').replace('reduce-scatter','rs').replace('collective-permute','cp')}:{v['count']}"
+            for k, v in sorted(cols.items())
+        )
+        rows.append(
+            f"| {name} | ok | flops/chip {rec['flops']:.2e}, hbm-rw {rec['bytes_accessed']:.2e} B"
+            f" | arg {fmt_bytes(mem.get('argument_size_in_bytes',0))} GB, temp {fmt_bytes(mem.get('temp_size_in_bytes',0))} GB"
+            f" | wire {rec['wire_bytes']:.2e} B | {col_str} |"
+        )
+    head = (
+        "| cell | status | cost_analysis | memory_analysis (per chip) | collective bytes | collective schedule |\n"
+        "|---|---|---|---|---|---|"
+    )
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table(dryrun_dir: str) -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("opts"):
+            continue
+        name = f"{rec['arch']} | {rec['shape']} | {rec['mesh']}"
+        if rec.get("status") != "ok":
+            rows.append(f"| {name} | — | — | — | {rec.get('reason','skip')[:40]} | | |")
+            continue
+        a = analyze_record(rec)
+        rows.append(
+            f"| {name} | {a['compute_s']:.3f} | {a['memory_s']:.3f} | "
+            f"{a['collective_s']:.3f} | **{a['dominant']}** | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_fraction']*100:.1f}% |"
+        )
+    head = (
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant | useful | roofline |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    return head + "\n" + "\n".join(rows)
+
+
+def perf_rows(dryrun_dir: str) -> str:
+    """All opt-tagged cells: the hillclimb measurements."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if not rec.get("opts") or rec.get("status") != "ok":
+            continue
+        a = analyze_record(rec)
+        mem = rec.get("memory", {})
+        rows.append(
+            f"| {rec['arch']} × {rec['shape']} | {'+'.join(rec['opts'])} | "
+            f"{a['compute_s']:.3f} | {a['memory_s']:.3f} | {a['collective_s']:.3f} | "
+            f"{max(a['compute_s'],a['memory_s'],a['collective_s']):.3f} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes',0))} GB |"
+        )
+    head = (
+        "| cell | opts | compute s | memory s | collective s | step LB s | temp/chip |\n"
+        "|---|---|---|---|---|---|---|"
+    )
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--baseline-dir", default="experiments/baseline")
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("<!-- dryrun table -->")
+        print(dryrun_table(args.baseline_dir))
+    if args.section in ("all", "roofline"):
+        print("\n<!-- roofline table (baseline) -->")
+        print(roofline_table(args.baseline_dir))
+    if args.section in ("all", "perf"):
+        print("\n<!-- perf (opt-tagged) cells -->")
+        print(perf_rows(args.dryrun_dir))
+
+
+if __name__ == "__main__":
+    main()

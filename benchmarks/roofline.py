@@ -1,0 +1,148 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts in experiments/dryrun/.
+
+  compute term    = HLO_FLOPs_per_chip / 197e12        [s]   (bf16 peak)
+  memory term     = HLO_bytes_per_chip / 819e9         [s]   (HBM bw)
+  collective term = wire_bytes_per_chip / 50e9         [s]   (1 ICI link,
+                    ring-model effective bytes; conservative)
+
+cost_analysis of the partitioned module is per-chip, so no further division
+by chip count is needed.  MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill),
+2*N*B (decode), with N = active params for MoE.  The useful-compute ratio
+MODEL_FLOPS/HLO_FLOPs exposes remat and dispatch overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def model_flops_per_chip(arch: str, shape: str, n_devices: int) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode) with exact embedding
+    accounting: the embedding gather contributes no matmul flops; the unembed
+    matmul (d x V) applies to every token in train but only to the final
+    token per sequence in prefill/decode."""
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    from repro.models import active_param_count
+
+    cfg = get_config(arch)
+    n_active = active_param_count(cfg)
+    embed = cfg.vocab * cfg.d_model
+    unembed_params = 0 if cfg.tie_embeddings else embed
+    n_layers_only = n_active - embed - unembed_params
+    unembed_matmul = embed  # d x V logits matmul (tied or not)
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    if spec.kind == "train":
+        total = 6.0 * (n_layers_only + unembed_matmul) * B * S
+    elif spec.kind == "prefill":
+        total = 2.0 * n_layers_only * B * S + 2.0 * unembed_matmul * B
+    else:  # decode: one token per sequence
+        total = 2.0 * (n_layers_only + unembed_matmul) * B
+    return total / n_devices
+
+
+def analyze_record(rec: dict) -> dict:
+    ct = rec["flops"] / PEAK_FLOPS
+    mt = rec["bytes_accessed"] / HBM_BW
+    xt = rec["wire_bytes"] / ICI_BW
+    terms = {"compute": ct, "memory": mt, "collective": xt}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_chip(rec["arch"], rec["shape"], rec["n_devices"])
+    step_lb = max(terms.values())
+    mem = rec.get("memory", {})
+    hbm = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0)
+    )
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": ct,
+        "memory_s": mt,
+        "collective_s": xt,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / rec["flops"] if rec["flops"] else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / step_lb if step_lb else 0.0,
+        "hbm_bytes_per_chip": hbm,
+        "fits_hbm": hbm <= HBM_PER_CHIP,
+    }
+
+
+def run(out_dir="experiments", dryrun_dir=None, quick=False):
+    if dryrun_dir is None:  # prefer the frozen baseline artifacts
+        dryrun_dir = (
+            "experiments/baseline"
+            if os.path.isdir("experiments/baseline")
+            else "experiments/dryrun"
+        )
+    records = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("opts"):  # §Perf variants live in their own table
+            continue
+        if rec.get("status") != "ok":
+            records.append(
+                {
+                    "name": f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+                    "status": rec.get("status", "missing"),
+                    "us_per_call": -1,
+                    "reason": rec.get("reason", rec.get("error", "")),
+                }
+            )
+            continue
+        a = analyze_record(rec)
+        records.append(
+            {
+                "name": f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}",
+                "status": "ok",
+                "us_per_call": int(max(a["compute_s"], a["memory_s"], a["collective_s"]) * 1e6),
+                **{
+                    k: (f"{v:.3e}" if isinstance(v, float) else v)
+                    for k, v in a.items()
+                    if k not in ("arch", "shape", "mesh")
+                },
+            }
+        )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "roofline.json"), "w") as f:
+            json.dump(records, f, indent=1)
+        with open(os.path.join(out_dir, "roofline.md"), "w") as f:
+            f.write(markdown_table(records))
+    return records
+
+
+def markdown_table(records: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant "
+        "| useful | roofline frac | HBM/chip | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|"[:-4],
+    ]
+    for r in records:
+        if r["status"] != "ok":
+            name = r["name"].split("/")
+            lines.append(
+                f"| {name[1]} | {name[2]} | {name[3]} | — | — | — | skipped: "
+                f"{r.get('reason','')[:40]} | | | |"
+            )
+            continue
+        name = r["name"].split("/")
+        hbm_gb = float(r["hbm_bytes_per_chip"]) / 1e9 if r.get("hbm_bytes_per_chip") else 0
+        lines.append(
+            f"| {name[1]} | {name[2]} | {name[3]} | {r['compute_s']} | "
+            f"{r['memory_s']} | {r['collective_s']} | {r['dominant']} | "
+            f"{r['useful_ratio']} | {r['roofline_fraction']} | {hbm_gb:.1f}GB | "
+            f"{'y' if r.get('fits_hbm') else 'n'} |"
+        )
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,56 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs the paper-scale
+sweeps (tens of minutes of partitioning); the default grid finishes in a few
+minutes and exercises every harness.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import bench_amg, bench_bounds, bench_kernels, bench_lp, bench_mcl, bench_tab2
+from benchmarks import roofline
+from benchmarks.common import csv_lines
+
+SUITES = {
+    "tab2": bench_tab2.run,
+    "amg": bench_amg.run,
+    "lp": bench_lp.run,
+    "mcl": bench_mcl.run,
+    "bounds": bench_bounds.run,
+    "kernels": bench_kernels.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument("--out", default="experiments/paper")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            if name == "roofline":
+                records = fn(out_dir="experiments")
+            else:
+                records = fn(out_dir=args.out, quick=not args.full)
+        except Exception as e:  # a suite failing should not hide the others
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}")
+            failures += 1
+            continue
+        for line in csv_lines(records):
+            print(line)
+        sys.stdout.flush()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

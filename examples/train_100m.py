@@ -1,0 +1,113 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter decoder for a
+few hundred steps on the synthetic pipeline, with checkpointing + restart.
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300
+
+The model is the internlm2 family scaled to ~100M params (d=768, 12 layers,
+16k vocab).  Loss should drop well below the uniform baseline ln(16384)=9.70
+within the first tens of steps (the synthetic stream has Zipf unigrams +
+repeated motifs worth >4 nats).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.elastic import run_loop
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params, param_count
+from repro.models.config import ModelConfig
+from repro.training.optimizer import adamw_init
+from repro.training.step import make_train_step
+
+
+def model_100m() -> ModelConfig:
+    base = get_config("internlm2-1.8b")
+    import dataclasses
+
+    return dataclasses.replace(
+        base,
+        name="repro-100m",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        d_head=64,
+        d_ff=3072,
+        vocab=16384,
+        dtype="float32",
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    ap.add_argument("--log", default="experiments/train_100m.jsonl")
+    args = ap.parse_args(argv)
+
+    cfg = model_100m()
+    n = param_count(cfg)
+    print(f"model {cfg.name}: {n/1e6:.1f}M params, uniform nll={math.log(cfg.vocab):.3f}")
+    mesh = make_host_mesh()
+    jax.set_mesh(mesh)
+
+    step = jax.jit(make_train_step(cfg, lr=args.lr), donate_argnums=(0, 1))
+    params = init_params(cfg, jax.random.key(0))
+    opt = adamw_init(params)
+    data = SyntheticTokens(
+        vocab=cfg.vocab, seq_len=args.seq_len, global_batch=args.global_batch, seed=0
+    )
+    os.makedirs(os.path.dirname(args.log) or ".", exist_ok=True)
+    logf = open(args.log, "a")
+
+    t_start = time.time()
+
+    def step_fn(state, idx):
+        p, o = state
+        batch = {k: jnp.asarray(v) for k, v in data.batch(idx).items()}
+        p, o, m = step(p, o, batch)
+        loss = float(m["loss"])
+        if idx % 10 == 0 or idx == args.steps - 1:
+            rec = {
+                "step": idx,
+                "loss": round(loss, 4),
+                "grad_norm": round(float(m["grad_norm"]), 3),
+                "wall_s": round(time.time() - t_start, 1),
+            }
+            print(rec, flush=True)
+            logf.write(json.dumps(rec) + "\n")
+            logf.flush()
+        return p, o
+
+    (params, opt), stats = run_loop(
+        (params, opt),
+        step_fn,
+        args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=50,
+        state_to_tree=lambda s: {"p": s[0], "o": s[1]},
+        tree_to_state=lambda t, s: (
+            jax.tree.map(jnp.asarray, t["p"]),
+            jax.tree.map(jnp.asarray, t["o"]),
+        ),
+    )
+    print(f"finished {stats.steps_run} steps ({stats.restarts} restarts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,450 @@
+"""Multilevel K-way hypergraph partitioner.
+
+PaToH stand-in: recursive bisection with
+  (1) heavy-connectivity vertex matching for coarsening (vectorized through a
+      scipy sparse similarity product),
+  (2) greedy BFS-style initial bisection under a compute-balance constraint,
+  (3) boundary FM refinement with classic delta-gain updates, minimizing the
+      connectivity metric sum_n c(n) * (lambda(n) - 1) (what PaToH minimizes,
+      Sec. 6; for a bisection this equals the weighted cut),
+subject to w_comp(V_i) <= (1 + eps) * W / p (Def. 4.4 with delta = p - 1,
+matching the paper's experiments).
+
+Engineering notes (documented, standard heuristics):
+- nets larger than ``BIG_NET`` pins are ignored during matching and their
+  delta-gain propagation is skipped (their contribution to gains is still
+  counted when a vertex's gain is first computed); at the sizes we run,
+  such nets are almost never uncuttable anyway.
+- FM candidate set = vertices on cut nets, capped per pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core.hypergraph import Hypergraph, build_hypergraph_flat
+
+BIG_NET = 96  # pins; nets above this are skipped in matching/gain updates
+MAX_MOVES_PER_PASS = 1200
+DEG_CAP = 2500  # vertices in more nets than this are not FM move candidates
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    parts: np.ndarray  # (n_vertices,) int64 part ids
+    p: int
+    connectivity: int  # final objective value
+
+
+# ---------------------------------------------------------------------------
+# coarsening
+# ---------------------------------------------------------------------------
+def _match_vertices(
+    hg: Hypergraph, rng: np.random.Generator, max_weight: float
+) -> np.ndarray:
+    """Heavy-connectivity matching via a sparse similarity product:
+    sim(u, v) = sum over shared (small) nets of c(n)/(|n| - 1).  Each vertex
+    proposes its best partner (row argmax); proposals are granted greedily in
+    descending-score order."""
+    sizes = hg.net_sizes()
+    ok = (sizes > 1) & (sizes <= BIG_NET)
+    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), sizes)
+    keep = ok[net_ids]
+    rows, cols = net_ids[keep], hg.net_pins[keep]
+    w = np.sqrt(hg.net_cost[rows].astype(np.float64) / np.maximum(sizes[rows] - 1, 1))
+    W = sp.coo_matrix((w, (rows, cols)), shape=(hg.n_nets, hg.n_vertices)).tocsr()
+    S = (W.T @ W).tocsr()
+    S.setdiag(0)
+    S.eliminate_zeros()
+    n = hg.n_vertices
+    best = np.full(n, -1, dtype=np.int64)
+    score = np.zeros(n, dtype=np.float64)
+    indptr, indices, data = S.indptr, S.indices, S.data
+    nz_rows = np.flatnonzero(np.diff(indptr) > 0)
+    for v in nz_rows:
+        lo, hi = indptr[v], indptr[v + 1]
+        j = lo + np.argmax(data[lo:hi])
+        best[v] = indices[j]
+        score[v] = data[j]
+    order = np.argsort(-score, kind="stable")
+    match = np.full(n, -1, dtype=np.int64)
+    wc = hg.w_comp
+    for v in order:
+        u = best[v]
+        if u < 0 or score[v] <= 0:
+            break
+        if match[v] < 0 and match[u] < 0 and wc[u] + wc[v] <= max_weight:
+            match[v] = u
+            match[u] = v
+    unmatched = match < 0
+    coarse = np.full(n, -1, dtype=np.int64)
+    # matched pairs get one id, singletons keep their own
+    pair_lo = np.flatnonzero((match > np.arange(n)))
+    k = 0
+    coarse[pair_lo] = np.arange(len(pair_lo))
+    coarse[match[pair_lo]] = coarse[pair_lo]
+    k = len(pair_lo)
+    singles = np.flatnonzero(unmatched)
+    coarse[singles] = k + np.arange(len(singles))
+    return coarse
+
+
+def _coarsen(hg: Hypergraph, coarse: np.ndarray) -> tuple[Hypergraph, int]:
+    """Contract vertices by ``coarse``; drop singletons (Sec. 5.1).
+
+    Identical nets are NOT coalesced inside the V-cycle: duplicate nets yield
+    exactly the same connectivity objective and FM gains (their costs add),
+    so coalescing is a pure speed tradeoff — and the hashing dominated the
+    profile.  ``hypergraph.coalesce_identical_nets`` stays available for the
+    modeling API (Sec. 5.3/5.4 builders use summed costs directly)."""
+    n_coarse = int(coarse.max()) + 1
+    w_comp = np.bincount(coarse, weights=hg.w_comp, minlength=n_coarse).astype(np.int64)
+    w_mem = np.bincount(coarse, weights=hg.w_mem, minlength=n_coarse).astype(np.int64)
+
+    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), hg.net_sizes())
+    pins = coarse[hg.net_pins]
+    key = np.unique(net_ids * n_coarse + pins)
+    net_ids, pins = key // n_coarse, key % n_coarse
+
+    counts = np.bincount(net_ids, minlength=hg.n_nets)
+    keep = counts[net_ids] > 1
+    net_ids, pins = net_ids[keep], pins[keep]
+    if len(net_ids) == 0:
+        empty = np.empty(0, dtype=np.int64)
+        return (
+            build_hypergraph_flat(empty, empty, 0, n_coarse, w_comp, w_mem, empty),
+            n_coarse,
+        )
+    uniq_nets, compact = np.unique(net_ids, return_inverse=True)
+    return (
+        build_hypergraph_flat(
+            compact,
+            pins,
+            len(uniq_nets),
+            n_coarse,
+            w_comp,
+            w_mem,
+            hg.net_cost[uniq_nets],
+        ),
+        n_coarse,
+    )
+
+
+# ---------------------------------------------------------------------------
+# initial bisection + FM refinement
+# ---------------------------------------------------------------------------
+def _initial_bisect(
+    hg: Hypergraph, target0: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Greedy net-BFS growth of side 0 up to ~target0 total compute weight."""
+    n = hg.n_vertices
+    side = np.ones(n, dtype=np.int8)
+    ptr, vnets = hg.vertex_to_nets()
+    net_ptr, net_pins = hg.net_ptr, hg.net_pins
+    w = hg.w_comp.astype(np.float64)
+    total0 = 0.0
+    seed = int(rng.integers(n))
+    frontier: deque[int] = deque([seed])
+    seen = np.zeros(n, dtype=bool)
+    seen[seed] = True
+    n_seen = 1
+    while total0 < target0:
+        if not frontier:
+            rest = np.flatnonzero(~seen)
+            if not len(rest):
+                break
+            s = int(rest[rng.integers(len(rest))])
+            seen[s] = True
+            n_seen += 1
+            frontier.append(s)
+        v = frontier.popleft()
+        if total0 + w[v] > target0 * 1.05 and total0 > 0:
+            continue
+        side[v] = 0
+        total0 += w[v]
+        for nid in vnets[ptr[v] : ptr[v + 1]]:
+            pins = net_pins[net_ptr[nid] : net_ptr[nid + 1]]
+            for u in pins:
+                if not seen[u]:
+                    seen[u] = True
+                    n_seen += 1
+                    frontier.append(u)
+    return side
+
+
+def _compute_counts(hg: Hypergraph, side: np.ndarray) -> np.ndarray:
+    """(n_nets, 2) per-side pin counts."""
+    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), hg.net_sizes())
+    pin_side = side[hg.net_pins]
+    cnt = np.zeros((hg.n_nets, 2), dtype=np.int64)
+    cnt[:, 1] = np.bincount(net_ids, weights=pin_side, minlength=hg.n_nets)
+    cnt[:, 0] = hg.net_sizes() - cnt[:, 1]
+    return cnt
+
+
+def _gains_for_all(hg: Hypergraph, side: np.ndarray, cnt: np.ndarray) -> np.ndarray:
+    """Vectorized FM gains for all vertices via two sparse matvecs:
+    gain(v) = sum_{n in v} c(n)[cnt(n, side(v)) == 1] - c(n)[cnt(n, other) == 0]."""
+    inc = hg.incidence()  # (n_nets, n_vertices) cached on the hypergraph
+    cost = hg.net_cost.astype(np.float64)
+    only0 = cost * (cnt[:, 0] == 1)
+    only1 = cost * (cnt[:, 1] == 1)
+    empty0 = cost * (cnt[:, 0] == 0)
+    empty1 = cost * (cnt[:, 1] == 0)
+    # per-vertex sums of each net quantity
+    s_only0 = inc.T @ only0
+    s_only1 = inc.T @ only1
+    s_empty0 = inc.T @ empty0
+    s_empty1 = inc.T @ empty1
+    side_b = side.astype(bool)
+    gains = np.where(side_b, s_only1 - s_empty0, s_only0 - s_empty1)
+    return gains
+
+
+def _fm_refine(
+    hg: Hypergraph,
+    side: np.ndarray,
+    max_w: tuple[float, float],
+    passes: int = 2,
+    rng: np.random.Generator | None = None,
+) -> np.ndarray:
+    """Boundary FM with classic delta-gain updates and per-pass rollback."""
+    rng = rng or np.random.default_rng(0)
+    ptr, vnets = hg.vertex_to_nets()
+    net_ptr, net_pins = hg.net_ptr, hg.net_pins
+    cost = hg.net_cost.astype(np.float64)
+    sizes = hg.net_sizes()
+    small = sizes <= BIG_NET
+    w = hg.w_comp.astype(np.float64)
+    side = side.astype(np.int8).copy()
+
+    for _pass in range(passes):
+        cnt = _compute_counts(hg, side)
+        side_w = np.array([w[side == 0].sum(), w[side == 1].sum()])
+        cut = (cnt[:, 0] > 0) & (cnt[:, 1] > 0)
+        if not cut.any():
+            break
+        all_gains = _gains_for_all(hg, side, cnt)
+        # candidates: boundary vertices, best gains first (vectorized via the
+        # per-pin net-id expansion)
+        boundary = np.zeros(hg.n_vertices, dtype=bool)
+        pin_cut = np.repeat(cut, sizes)
+        boundary[net_pins[pin_cut]] = True
+        deg = np.diff(ptr)
+        cand = np.flatnonzero(boundary & (deg <= DEG_CAP))
+        if len(cand) == 0:
+            break
+        if len(cand) > MAX_MOVES_PER_PASS:
+            top = np.argsort(-all_gains[cand], kind="stable")[:MAX_MOVES_PER_PASS]
+            cand = cand[top]
+        pos_of = np.full(hg.n_vertices, -1, dtype=np.int64)
+        pos_of[cand] = np.arange(len(cand))
+        gains = all_gains[cand]
+        locked = np.zeros(len(cand), dtype=bool)
+
+        history: list[int] = []
+        cum, best_cum, best_idx = 0.0, 0.0, -1
+        NEG = -1e30
+        g_work = gains.copy()
+        for _move in range(len(cand)):
+            g_masked = np.where(locked, NEG, g_work)
+            # balance feasibility
+            vs = cand
+            s_arr = side[vs]
+            feasible = side_w[1 - s_arr] + w[vs] <= np.array(max_w)[1 - s_arr]
+            g_masked = np.where(feasible, g_masked, NEG)
+            bi = int(np.argmax(g_masked))
+            if g_masked[bi] <= NEG / 2:
+                break
+            bg = g_work[bi]
+            v = int(cand[bi])
+            s = int(side[v])
+            t = 1 - s
+            # --- apply move with vectorized delta-gain updates ---
+            nets = vnets[ptr[v] : ptr[v + 1]]
+            snets = nets[small[nets]]
+            ct_before = cnt[snets, t]
+            # rule 1: t-count was 0 -> all other free pins gain +c
+            # rule 2: t-count was 1 -> the lone t-side free pin gains -c
+            r1 = snets[ct_before == 0]
+            r2 = snets[ct_before == 1]
+            cnt[nets, s] -= 1
+            cnt[nets, t] += 1
+            cs_after = cnt[snets, s]
+            # rule 3: s-count now 0 -> all other free pins gain -c
+            # rule 4: s-count now 1 -> the lone s-side free pin gains +c
+            r3 = snets[cs_after == 0]
+            r4 = snets[cs_after == 1]
+
+            def _apply(rule_nets, sign, side_filter):
+                if len(rule_nets) == 0:
+                    return
+                pins = np.concatenate(
+                    [net_pins[net_ptr[n] : net_ptr[n + 1]] for n in rule_nets]
+                )
+                cs = np.repeat(cost[rule_nets],
+                               net_ptr[rule_nets + 1] - net_ptr[rule_nets])
+                pu = pos_of[pins]
+                m = (pu >= 0) & (pins != v)
+                if side_filter is not None:
+                    m &= side[pins] == side_filter
+                pu = pu[m]
+                m2 = ~locked[pu]
+                np.add.at(g_work, pu[m2], sign * cs[m][m2])
+
+            _apply(r1, +1.0, None)
+            _apply(r2, -1.0, t)
+            _apply(r3, -1.0, None)
+            _apply(r4, +1.0, s)
+            side[v] = t
+            side_w[s] -= w[v]
+            side_w[t] += w[v]
+            locked[bi] = True
+            history.append(v)
+            cum += bg
+            if cum > best_cum + 1e-9:
+                best_cum, best_idx = cum, len(history) - 1
+            if bg < 0 and len(history) - 1 - best_idx > 50:
+                break  # hill-descent cutoff
+        # rollback to best prefix
+        for v in history[best_idx + 1 :]:
+            s = int(side[v])
+            side[v] = 1 - s
+            side_w[s] -= w[v]
+            side_w[1 - s] += w[v]
+        if best_cum <= 0:
+            break
+    return side
+
+
+def _bisect(
+    hg: Hypergraph,
+    k0: int,
+    k1: int,
+    part_cap: float,
+    rng: np.random.Generator,
+    coarsen_to: int = 160,
+) -> np.ndarray:
+    """Multilevel bisection into sides destined for k0 and k1 parts.
+
+    ``part_cap`` is the GLOBAL maximum per-part weight (1+eps) * W_total / p;
+    the side caps are k_side * part_cap so imbalance cannot compound down the
+    recursion."""
+    total = float(hg.w_comp.sum())
+    frac0 = k0 / (k0 + k1)
+    levels: list[tuple[Hypergraph, np.ndarray]] = []
+    cur = hg
+    heaviest = float(cur.w_comp.max()) if cur.n_vertices else 0.0
+    while cur.n_vertices > coarsen_to:
+        cmap = _match_vertices(cur, rng, max_weight=max(total / 10, heaviest))
+        nxt, n_coarse = _coarsen(cur, cmap)
+        if n_coarse >= cur.n_vertices * 0.95:  # matching stalled
+            break
+        levels.append((cur, cmap))
+        cur = nxt
+
+    max_w = (k0 * part_cap, k1 * part_cap)
+    side = _initial_bisect(cur, min(total * frac0, max_w[0]), rng)
+    side = _fm_refine(cur, side, max_w, rng=rng)
+    for fine, cmap in reversed(levels):
+        side = side[cmap]
+        side = _fm_refine(fine, side, max_w, rng=rng)
+    return side
+
+
+def _restrict(hg: Hypergraph, mask: np.ndarray) -> tuple[Hypergraph, np.ndarray]:
+    """Sub-hypergraph induced on ``mask`` vertices (nets restricted, singletons
+    dropped).  Returns (sub, original-ids-of-sub-vertices)."""
+    ids = np.flatnonzero(mask)
+    remap = np.full(hg.n_vertices, -1, dtype=np.int64)
+    remap[ids] = np.arange(len(ids))
+    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), hg.net_sizes())
+    keep = mask[hg.net_pins]
+    net_ids = net_ids[keep]
+    pins = remap[hg.net_pins[keep]]
+    counts = np.bincount(net_ids, minlength=hg.n_nets)
+    keep2 = counts[net_ids] > 1
+    net_ids, pins = net_ids[keep2], pins[keep2]
+    uniq, new_net = np.unique(net_ids, return_inverse=True)
+    sub = build_hypergraph_flat(
+        new_net,
+        pins,
+        len(uniq),
+        len(ids),
+        hg.w_comp[ids],
+        hg.w_mem[ids],
+        hg.net_cost[uniq],
+    )
+    return sub, ids
+
+
+def partition(
+    hg: Hypergraph,
+    p: int,
+    eps: float = 0.03,
+    seed: int = 0,
+) -> PartitionResult:
+    """K-way partition via recursive bisection."""
+    from repro.core.comm import evaluate
+
+    rng = np.random.default_rng(seed)
+    parts = np.zeros(hg.n_vertices, dtype=np.int64)
+    if p > 1 and hg.n_vertices:
+        # global per-part cap; heavy vertices can force violations (the paper
+        # observes exactly this for 1D models on scale-free inputs, Sec. 6.3)
+        part_cap = max(
+            (1 + eps) * float(hg.w_comp.sum()) / p, float(hg.w_comp.max())
+        )
+        stack: list[tuple[Hypergraph, np.ndarray, int, int]] = [
+            (hg, np.arange(hg.n_vertices), 0, p)
+        ]
+        while stack:
+            sub, ids, lo, hi = stack.pop()
+            k = hi - lo
+            if k == 1:
+                parts[ids] = lo
+                continue
+            k0 = k // 2
+            side = _bisect(sub, k0, k - k0, part_cap, rng)
+            for s, plo, phi in ((0, lo, lo + k0), (1, lo + k0, hi)):
+                mask = side == s
+                if not mask.any():
+                    continue
+                if phi - plo == 1:
+                    parts[ids[mask]] = plo
+                else:
+                    ssub, sids = _restrict(sub, mask)
+                    stack.append((ssub, ids[mask], plo, phi))
+    conn = evaluate(hg, parts, p).connectivity
+    return PartitionResult(parts=parts, p=p, connectivity=conn)
+
+
+def partition_random(hg: Hypergraph, p: int, seed: int = 0) -> PartitionResult:
+    """Balanced random partition (baseline)."""
+    from repro.core.comm import evaluate
+
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(hg.n_vertices)
+    w = hg.w_comp[order].astype(np.float64)
+    cum = np.cumsum(w)
+    total = cum[-1] if len(cum) else 1.0
+    parts = np.empty(hg.n_vertices, dtype=np.int64)
+    parts[order] = np.minimum((cum / total * p).astype(np.int64), p - 1)
+    conn = evaluate(hg, parts, p).connectivity
+    return PartitionResult(parts=parts, p=p, connectivity=conn)
+
+
+def partition_block(hg: Hypergraph, p: int) -> PartitionResult:
+    """Contiguous block partition by vertex order balanced on w_comp (the
+    'natural' ordering baseline)."""
+    from repro.core.comm import evaluate
+
+    w = hg.w_comp.astype(np.float64)
+    cum = np.cumsum(w)
+    total = cum[-1] if len(cum) else 1.0
+    parts = np.minimum((cum / total * p).astype(np.int64), p - 1)
+    conn = evaluate(hg, parts, p).connectivity
+    return PartitionResult(parts=parts, p=p, connectivity=conn)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokens, make_batch
+
+__all__ = ["SyntheticTokens", "make_batch"]

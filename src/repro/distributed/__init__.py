@@ -1,0 +1,17 @@
+"""Distributed SpGEMM executors (shard_map) + inspector-executor planning."""
+from repro.distributed.plan import RowwisePlan, build_rowwise_plan, OuterPlan, build_outer_plan
+from repro.distributed.spgemm_exec import (
+    rowwise_spgemm,
+    outer_product_spgemm,
+    spsumma,
+)
+
+__all__ = [
+    "RowwisePlan",
+    "build_rowwise_plan",
+    "OuterPlan",
+    "build_outer_plan",
+    "rowwise_spgemm",
+    "outer_product_spgemm",
+    "spsumma",
+]

@@ -1,0 +1,152 @@
+"""Inspector phase: lower a hypergraph partition to a static execution plan.
+
+The partition of the row-wise (or outer-product) model decides ownership; the
+plan materializes, with static padded shapes, exactly the data movement the
+hypergraph cut prescribes:
+
+- row-wise: device d owns row set R_d of A and C, and row set S_d of B (the
+  partition of V^B, or round-robin when V^nz was omitted).  The expand phase
+  sends B row k from its owner to every device whose A-columns touch k — one
+  transfer per (cut net, touched part) pair, i.e. volume = sum_n c(n) *
+  (lambda(n) - 1) plus padding.  Realized as a single padded all_to_all.
+- outer-product: device d owns column set K_d of A and B-row set K_d; the
+  fold phase routes partial C rows to C's owner.
+
+All index arrays are padded to per-pair maxima so XLA sees static shapes; the
+padding fraction is reported so benchmarks can quantify executor overhead vs
+the combinatorial volume.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.spgemm_models import SpGEMMInstance
+
+
+@dataclasses.dataclass
+class RowwisePlan:
+    p: int
+    row_part: np.ndarray  # (I,) owner of each A/C row
+    b_part: np.ndarray  # (K,) owner of each B row
+    # per-device padded local row ids (I_max,) with -1 padding
+    local_rows: np.ndarray  # (p, I_max)
+    # expand-phase routing: send_idx[s, d, t] = local index (into s's B rows)
+    # of the t-th B row device s ships to device d; -1 = padding
+    send_idx: np.ndarray  # (p, p, T_max)
+    # after the all_to_all, device d holds recv[s, t] slots; gather_idx maps
+    # global B row k -> position in d's receive buffer (K,) per device
+    recv_key: np.ndarray  # (p, p, T_max) global B-row id or -1
+    local_b_rows: np.ndarray  # (p, K_max) B rows owned per device, -1 pad
+    padding_fraction: float
+    comm_words_ideal: int  # hypergraph connectivity volume (rows)
+    comm_words_padded: int  # p*p*T_max actually shipped
+
+
+def build_rowwise_plan(
+    inst: SpGEMMInstance,
+    row_part: np.ndarray,
+    p: int,
+    b_part: np.ndarray | None = None,
+) -> RowwisePlan:
+    I, K, J = inst.shape
+    row_part = np.asarray(row_part, dtype=np.int64)
+    if b_part is None:
+        # default B distribution: round-robin rows (paper Sec. 6: V^nz omitted)
+        b_part = np.arange(K, dtype=np.int64) % p
+    # which devices need B row k: parts of A-column-k's rows
+    acsc = inst.a.tocsc()
+    need = [[] for _ in range(K)]  # destinations per B row
+    for k in range(K):
+        rows = acsc.indices[acsc.indptr[k] : acsc.indptr[k + 1]]
+        devs = np.unique(row_part[rows])
+        need[k] = [int(d) for d in devs]
+
+    send_lists: dict[tuple[int, int], list[int]] = {}
+    ideal = 0
+    for k in range(K):
+        src = int(b_part[k])
+        for d in need[k]:
+            if d == src:
+                continue
+            send_lists.setdefault((src, d), []).append(k)
+            ideal += 1
+
+    T_max = max((len(v) for v in send_lists.values()), default=0)
+    T_max = max(T_max, 1)
+    send_idx = np.full((p, p, T_max), -1, dtype=np.int64)
+    recv_key = np.full((p, p, T_max), -1, dtype=np.int64)
+
+    # local B-row numbering per device
+    owned = [np.flatnonzero(b_part == d) for d in range(p)]
+    K_max = max((len(o) for o in owned), default=1)
+    K_max = max(K_max, 1)
+    local_b_rows = np.full((p, K_max), -1, dtype=np.int64)
+    local_of = np.full(K, -1, dtype=np.int64)
+    for d in range(p):
+        local_b_rows[d, : len(owned[d])] = owned[d]
+        local_of[owned[d]] = np.arange(len(owned[d]))
+
+    for (s, d), ks in send_lists.items():
+        send_idx[s, d, : len(ks)] = local_of[np.array(ks)]
+        recv_key[s, d, : len(ks)] = ks
+
+    rows_by_dev = [np.flatnonzero(row_part == d) for d in range(p)]
+    I_max = max((len(r) for r in rows_by_dev), default=1)
+    I_max = max(I_max, 1)
+    local_rows = np.full((p, I_max), -1, dtype=np.int64)
+    for d in range(p):
+        local_rows[d, : len(rows_by_dev[d])] = rows_by_dev[d]
+
+    padded = p * p * T_max if ideal else 0
+    return RowwisePlan(
+        p=p,
+        row_part=row_part,
+        b_part=b_part,
+        local_rows=local_rows,
+        send_idx=send_idx,
+        recv_key=recv_key,
+        local_b_rows=local_b_rows,
+        padding_fraction=(padded - ideal) / max(padded, 1),
+        comm_words_ideal=ideal,
+        comm_words_padded=padded,
+    )
+
+
+@dataclasses.dataclass
+class OuterPlan:
+    p: int
+    k_part: np.ndarray  # (K,) owner of each A column / B row
+    c_part: np.ndarray  # (I,) owner of each C row (fold destinations)
+    local_ks: np.ndarray  # (p, K_max) columns owned per device, -1 pad
+    comm_words_ideal: int  # fold volume in C entries (connectivity metric)
+
+
+def build_outer_plan(
+    inst: SpGEMMInstance,
+    k_part: np.ndarray,
+    p: int,
+    c_part: np.ndarray | None = None,
+) -> OuterPlan:
+    I, K, J = inst.shape
+    k_part = np.asarray(k_part, dtype=np.int64)
+    if c_part is None:
+        c_part = np.arange(I, dtype=np.int64) % p
+    ks_by_dev = [np.flatnonzero(k_part == d) for d in range(p)]
+    K_max = max(max((len(x) for x in ks_by_dev), default=1), 1)
+    local_ks = np.full((p, K_max), -1, dtype=np.int64)
+    for d in range(p):
+        local_ks[d, : len(ks_by_dev[d])] = ks_by_dev[d]
+    # ideal fold volume: per C nonzero, (#distinct contributing k-parts - 1)
+    cpos = inst.mult_i * J + inst.mult_j
+    pair = np.unique(cpos * p + k_part[inst.mult_k])
+    lam = np.bincount(pair // p)
+    ideal = int(np.maximum(lam[lam > 0] - 1, 0).sum())
+    return OuterPlan(
+        p=p,
+        k_part=k_part,
+        c_part=c_part,
+        local_ks=local_ks,
+        comm_words_ideal=ideal,
+    )

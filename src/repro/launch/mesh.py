@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing this module never touches
+jax device initialization.  Single pod: 16 x 16 = 256 chips (data, model).
+Multi-pod: 2 x 16 x 16 = 512 chips (pod, data, model) — the 'pod' axis is
+pure data parallelism across the inter-pod (DCI) links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Elastic entry point: any (pod, data, model) factorization."""
+    return _mk(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    data = n // model
+    return _mk((data, model), ("data", "model"))

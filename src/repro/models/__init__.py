@@ -1,0 +1,23 @@
+"""Model stack: decoder transformer/SSM/hybrid layers + full models."""
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.transformer import (
+    init_params,
+    init_kv_cache,
+    forward,
+    train_loss,
+    decode_step,
+    param_count,
+    active_param_count,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "init_params",
+    "init_kv_cache",
+    "forward",
+    "train_loss",
+    "decode_step",
+    "param_count",
+    "active_param_count",
+]

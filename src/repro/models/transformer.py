@@ -1,0 +1,480 @@
+"""Full decoder model: init, forward (train/prefill), decode step, KV cache.
+
+Layers are stacked (leading axis = n_layers) and iterated with ``lax.scan``
+so the HLO stays one-layer-sized regardless of depth (compile-time critical
+for the 94-layer MoE dry-runs).  Heterogeneous-per-layer behaviour (hybrid
+global/SWA patterns) rides through per-layer scalar scan inputs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Materialize parameters.  Use jax.eval_shape(init_params, ...) for
+    allocation-free shapes (the dry-run path)."""
+    dt = jnp.dtype(cfg.dtype)
+    d, H, KVH, Dh, F, V, Ln = (
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.head_dim,
+        cfg.d_ff,
+        cfg.vocab,
+        cfg.n_layers,
+    )
+    keys = iter(jax.random.split(key, 64))
+    s_embed = 1.0 / np.sqrt(d)
+    params: dict = {
+        "embed": {"tokens": _init(next(keys), (V, d), s_embed, dt)},
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(next(keys), (d, V), s_embed, dt)
+    layer: dict = {
+        "ln1": jnp.ones((Ln, d), dt),
+        "ln2": jnp.ones((Ln, d), dt),
+    }
+    if cfg.layer_kind in ("attn", "hybrid"):
+        attn = {
+            "wq": _init(next(keys), (Ln, d, H, Dh), s_embed, dt),
+            "wk": _init(next(keys), (Ln, d, KVH, Dh), s_embed, dt),
+            "wv": _init(next(keys), (Ln, d, KVH, Dh), s_embed, dt),
+            "wo": _init(next(keys), (Ln, H, Dh, d), 1.0 / np.sqrt(H * Dh), dt),
+        }
+        if cfg.qkv_bias:
+            attn["bq"] = jnp.zeros((Ln, H, Dh), dt)
+            attn["bk"] = jnp.zeros((Ln, KVH, Dh), dt)
+            attn["bv"] = jnp.zeros((Ln, KVH, Dh), dt)
+        layer["attn"] = attn
+    if cfg.layer_kind in ("mamba", "hybrid"):
+        Di = cfg.d_inner
+        N = (cfg.ssm.d_state if cfg.ssm else 16)
+        Kc = (cfg.ssm.d_conv if cfg.ssm else 4)
+        layer["ssm"] = {
+            "in_proj": _init(next(keys), (Ln, d, Di), s_embed, dt),
+            "gate_proj": _init(next(keys), (Ln, d, Di), s_embed, dt),
+            "conv_w": _init(next(keys), (Ln, Kc, Di), 0.5, dt),
+            "x_proj_b": _init(next(keys), (Ln, Di, N), s_embed, dt),
+            "x_proj_c": _init(next(keys), (Ln, Di, N), s_embed, dt),
+            "dt_proj": jnp.ones((Ln, Di), dt) * 0.1,
+            "a_log": jnp.tile(
+                jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, None],
+                (Ln, Di, 1),
+            ).astype(dt),
+            "d_skip": jnp.ones((Ln, Di), dt),
+            "out_proj": _init(next(keys), (Ln, Di, d), 1.0 / np.sqrt(Di), dt),
+        }
+    if cfg.moe is not None:
+        E, Fe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        layer["moe"] = {
+            "router": _init(next(keys), (Ln, d, E), s_embed, jnp.float32),
+            "wi": _init(next(keys), (Ln, E, d, Fe), s_embed, dt),
+            "wg": _init(next(keys), (Ln, E, d, Fe), s_embed, dt),
+            "wo": _init(next(keys), (Ln, E, Fe, d), 1.0 / np.sqrt(Fe), dt),
+        }
+        if cfg.moe.n_shared_experts:
+            layer["shared_mlp"] = {
+                "wi": _init(next(keys), (Ln, d, F), s_embed, dt),
+                "wg": _init(next(keys), (Ln, d, F), s_embed, dt),
+                "wo": _init(next(keys), (Ln, F, d), 1.0 / np.sqrt(F), dt),
+            }
+    elif F > 0:  # F == 0: no FFN sub-block (pure-Mamba archs)
+        mlp = {
+            "wi": _init(next(keys), (Ln, d, F), s_embed, dt),
+            "wo": _init(next(keys), (Ln, F, d), 1.0 / np.sqrt(F), dt),
+        }
+        if cfg.act in ("swiglu", "geglu"):
+            mlp["wg"] = _init(next(keys), (Ln, d, F), s_embed, dt)
+        layer["mlp"] = mlp
+    params["layers"] = layer
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(partial(init_params, cfg), jax.random.key(0))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    shapes = jax.eval_shape(partial(init_params, cfg), jax.random.key(0))
+    expert = sum(
+        int(np.prod(shapes["layers"]["moe"][k].shape))
+        for k in ("wi", "wg", "wo")
+    )
+    active_frac = cfg.moe.top_k / cfg.moe.n_experts
+    return total - expert + int(expert * active_frac)
+
+
+# ---------------------------------------------------------------------------
+# layer body (shared by train/prefill and decode)
+# ---------------------------------------------------------------------------
+def _attn_branch(lp, x, cfg: ModelConfig, positions, window):
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wv"])
+    if cfg.qkv_bias:
+        q = q + lp["attn"]["bq"]
+        k = k + lp["attn"]["bk"]
+        v = v + lp["attn"]["bv"]
+    if cfg.use_rope:
+        cos, sin = L.rope_freqs(cfg.head_dim, cfg.rope_theta, positions)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    o = L.chunked_attention(q, k, v, window=window)
+    o = constrain(o, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"]), (k, v)
+
+
+def _gather_fsdp(lp, cfg: ModelConfig):
+    """ZeRO-3-style weight gathering: constrain this layer's weights to their
+    TP-only sharding (drop the FSDP 'data' axis) right before use, so XLA
+    all-gathers the (small) weights once instead of all-reducing the (large)
+    partially-contracted activations."""
+    from repro.models.sharding import param_logical_axes, serve_overlay
+
+    axes = serve_overlay(param_logical_axes(cfg))["layers"]
+
+    def fix(leaf, ax):
+        return constrain(leaf, *ax[1:])  # strip the scanned 'layers' axis
+
+    return jax.tree.map(
+        fix,
+        lp,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def _layer_fwd(lp, x, cfg: ModelConfig, positions):
+    """One decoder layer (train/prefill).  Returns (y, aux_loss)."""
+    if cfg.gather_weights:
+        lp = _gather_fsdp(lp, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window
+    h = L.apply_norm(cfg.norm, x, lp["ln1"])
+    if cfg.layer_kind == "attn":
+        attn_out, _ = _attn_branch(lp, h, cfg, positions, window)
+        mix = attn_out
+    elif cfg.layer_kind == "mamba":
+        mix = L.mamba_block(lp["ssm"], h, cfg)
+    else:  # hybrid: parallel attention + SSM heads (Hymba)
+        attn_out, _ = _attn_branch(lp, h, cfg, positions, window)
+        ssm_out = L.mamba_block(lp["ssm"], h, cfg)
+        mix = 0.5 * (attn_out + ssm_out)
+
+    if cfg.parallel_block:
+        # command-r style: MLP on the same normalized input, single residual
+        ff, aux = _ffn(lp, h, cfg)
+        return x + mix + ff, aux
+    x = x + mix
+    h2 = L.apply_norm(cfg.norm, x, lp["ln2"])
+    ff, aux = _ffn(lp, h2, cfg)
+    return x + ff, aux
+
+
+def _ffn(lp, h, cfg: ModelConfig):
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        out, aux = L.moe_layer(lp["moe"], h, cfg)
+        if cfg.moe.n_shared_experts:
+            out = out + L.mlp(lp["shared_mlp"], h, cfg.act)
+    elif "mlp" in lp:
+        out = L.mlp(lp["mlp"], h, cfg.act)
+    else:  # no FFN sub-block (pure-Mamba archs)
+        out = jnp.zeros_like(h)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+def embed_inputs(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    """tokens and/or precomputed frontend embeddings -> (B, S, d)."""
+    parts = []
+    if "frontend_embeds" in batch:  # vlm/audio stub: modality frontend output
+        parts.append(batch["frontend_embeds"].astype(cfg.dtype))
+    if "tokens" in batch:
+        tok = params["embed"]["tokens"][batch["tokens"]]
+        parts.append(tok)
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return x
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    remat: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B, S, V), aux_loss)."""
+    x = embed_inputs(params, cfg, batch)
+    x = constrain(x, "batch", "seq", "embed")
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    body = partial(_layer_fwd, cfg=cfg, positions=positions)
+    if remat and cfg.remat_policy != "none":
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[cfg.remat_policy]
+        body = jax.checkpoint(body, policy=policy)
+
+    residual_axes = (
+        ("batch", "seq_shard", "embed")
+        if cfg.seq_shard_residual
+        else ("batch", "seq", "embed")
+    )
+
+    def scan_fn(carry, lp):
+        y, aux = body(lp, carry)
+        return constrain(y, *residual_axes), aux
+
+    x, auxes = jax.lax.scan(
+        scan_fn, x, params["layers"],
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    unembed = (
+        params["embed"]["tokens"].T if cfg.tie_embeddings else params["unembed"]
+    )
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, auxes.sum()
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict, remat: bool = True):
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    # frontend positions carry no labels: mask with -1
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    # align: logits for positions [0, S_txt) predicting labels
+    S_lab = labels.shape[1]
+    token_logp = jnp.take_along_axis(
+        logp[:, -S_lab:], safe[..., None], axis=-1
+    )[..., 0]
+    nll = -(token_logp * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill (serve) path: forward + cache construction
+# ---------------------------------------------------------------------------
+def _ring_align(x: jnp.ndarray, S: int, C: int, axis: int) -> jnp.ndarray:
+    """Trim the last C of S positions and rotate so position p sits at ring
+    slot p % C (matches decode's ``slot = pos % C``)."""
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(S - C, S)
+    trimmed = x[tuple(idx)]
+    return jnp.roll(trimmed, (S - C) % C, axis=axis)
+
+
+def prefill_step(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+) -> tuple[jnp.ndarray, dict]:
+    """Run the full prompt, return (last-token logits (B, V), KV cache)."""
+    x = embed_inputs(params, cfg, batch)
+    x = constrain(x, "batch", "seq", "embed")
+    B, S, d = x.shape
+    C = kv_cache_len(cfg, S)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    residual_axes = (
+        ("batch", "seq_shard", "embed")
+        if cfg.seq_shard_residual
+        else ("batch", "seq", "embed")
+    )
+
+    def scan_fn(carry, lp):
+        x = carry
+        if cfg.gather_weights:
+            lp = _gather_fsdp(lp, cfg)
+        h = L.apply_norm(cfg.norm, x, lp["ln1"])
+        entries = {}
+        if cfg.layer_kind in ("attn", "hybrid"):
+            attn_out, (k, v) = _attn_branch(lp, h, cfg, positions, cfg.sliding_window)
+            entries["k"] = _ring_align(k, S, C, axis=1)
+            entries["v"] = _ring_align(v, S, C, axis=1)
+            entries["cache_pos"] = _ring_align(
+                jnp.arange(S, dtype=jnp.int32), S, C, axis=0
+            )
+        if cfg.layer_kind in ("mamba", "hybrid"):
+            ssm_out, conv_tail, h_last = L.mamba_block_with_state(lp["ssm"], h, cfg)
+            entries["conv"] = conv_tail
+            entries["h"] = h_last
+        if cfg.layer_kind == "attn":
+            mix = attn_out
+        elif cfg.layer_kind == "mamba":
+            mix = ssm_out
+        else:
+            mix = 0.5 * (attn_out + ssm_out)
+        if cfg.parallel_block:
+            ff, _ = _ffn(lp, h, cfg)
+            y = x + mix + ff
+        else:
+            x2 = x + mix
+            h2 = L.apply_norm(cfg.norm, x2, lp["ln2"])
+            ff, _ = _ffn(lp, h2, cfg)
+            y = x2 + ff
+        return constrain(y, *residual_axes), entries
+
+    x, layer_cache = jax.lax.scan(
+        scan_fn, x, params["layers"],
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    x = L.apply_norm(cfg.norm, x[:, -1:], params["final_norm"])
+    unembed = (
+        params["embed"]["tokens"].T if cfg.tie_embeddings else params["unembed"]
+    )
+    logits = constrain(jnp.einsum("bsd,dv->bsv", x, unembed), "batch", "seq", "vocab")[:, 0]
+    cache = {"pos": jnp.asarray(S, jnp.int32), **layer_cache}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (serve) path
+# ---------------------------------------------------------------------------
+def kv_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    return min(cfg.sliding_window, seq_len) if cfg.sliding_window else seq_len
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None) -> dict:
+    """Cache pytree.  Attention: ring-buffer K/V (window-capped).  SSM:
+    (conv_state, h).  Hybrid: both."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    C = kv_cache_len(cfg, seq_len)
+    Ln = cfg.n_layers
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.layer_kind in ("attn", "hybrid"):
+        cache["k"] = jnp.zeros((Ln, batch, C, cfg.n_kv_heads, cfg.head_dim), dt)
+        cache["v"] = jnp.zeros((Ln, batch, C, cfg.n_kv_heads, cfg.head_dim), dt)
+        cache["cache_pos"] = jnp.full((Ln, C), -1, jnp.int32)
+    if cfg.layer_kind in ("mamba", "hybrid"):
+        ssm = cfg.ssm
+        Kc = ssm.d_conv if ssm else 4
+        N = ssm.d_state if ssm else 16
+        cache["conv"] = jnp.zeros((Ln, batch, Kc - 1, cfg.d_inner), dt)
+        cache["h"] = jnp.zeros((Ln, batch, cfg.d_inner, N), jnp.float32)
+    return cache
+
+
+def _layer_decode(lp, x, cache_slice, cfg: ModelConfig, pos):
+    """One layer, one token.  cache_slice holds this layer's cache entries."""
+    window = cfg.sliding_window
+    h = L.apply_norm(cfg.norm, x, lp["ln1"])
+    new_cache = dict(cache_slice)
+    C = cache_slice["k"].shape[1] if "k" in cache_slice else 0
+    kv_axes = {
+        "none": None,
+        "batch": ("batch", None, "kv_heads", "head_dim"),
+        "seq": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    }[cfg.kv_shard_mode]
+
+    def pin(c):
+        return constrain(c, *kv_axes) if kv_axes else c
+
+    def attn_out(h):
+        B = h.shape[0]
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        if cfg.qkv_bias:
+            q = q + lp["attn"]["bq"]
+            k = k + lp["attn"]["bk"]
+            v = v + lp["attn"]["bv"]
+        if cfg.use_rope:
+            p = jnp.broadcast_to(pos[None, None], (B, 1))
+            cos, sin = L.rope_freqs(cfg.head_dim, cfg.rope_theta, p)
+            q = L.apply_rope(q, cos, sin)
+            k = L.apply_rope(k, cos, sin)
+        slot = pos % C
+        k_cache = pin(pin(new_cache["k"]).at[:, slot].set(k[:, 0]))
+        v_cache = pin(pin(new_cache["v"]).at[:, slot].set(v[:, 0]))
+        cache_pos = new_cache["cache_pos"].at[slot].set(pos)
+        new_cache.update(k=k_cache, v=v_cache, cache_pos=cache_pos)
+        o = L.decode_attention(q, k_cache, v_cache, cache_pos, pos, window)
+        return jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+
+    if cfg.layer_kind == "attn":
+        mix = attn_out(h)
+    elif cfg.layer_kind == "mamba":
+        mix, conv, hst = L.mamba_decode_step(
+            lp["ssm"], h, cache_slice["conv"], cache_slice["h"], cfg
+        )
+        new_cache.update(conv=conv, h=hst)
+    else:
+        a = attn_out(h)
+        m, conv, hst = L.mamba_decode_step(
+            lp["ssm"], h, cache_slice["conv"], cache_slice["h"], cfg
+        )
+        new_cache.update(conv=conv, h=hst)
+        mix = 0.5 * (a + m)
+
+    if cfg.parallel_block:
+        ff, _ = _ffn(lp, h, cfg)
+        return x + mix + ff, new_cache
+    x = x + mix
+    h2 = L.apply_norm(cfg.norm, x, lp["ln2"])
+    ff, _ = _ffn(lp, h2, cfg)
+    return x + ff, new_cache
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    cache: dict,
+    tokens: jnp.ndarray,  # (B, 1) current token ids
+) -> tuple[jnp.ndarray, dict]:
+    """One serve step: returns (logits (B, V), new cache)."""
+    x = params["embed"]["tokens"][tokens]
+    pos = cache["pos"]
+
+    per_layer_keys = [k for k in cache if k not in ("pos",)]
+
+    def scan_fn(carry, inp):
+        x = carry
+        lp, cache_slice = inp
+        y, new_slice = _layer_decode(lp, x, cache_slice, cfg, pos)
+        return y, new_slice
+
+    layer_cache = {k: cache[k] for k in per_layer_keys}
+    x, new_layer_cache = jax.lax.scan(
+        scan_fn, x, (params["layers"], layer_cache),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    unembed = (
+        params["embed"]["tokens"].T if cfg.tie_embeddings else params["unembed"]
+    )
+    logits = constrain(jnp.einsum("bsd,dv->bsv", x, unembed), "batch", "seq", "vocab")[:, 0]
+    new_cache = {"pos": pos + 1, **new_layer_cache}
+    return logits, new_cache

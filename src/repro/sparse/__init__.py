@@ -1,0 +1,27 @@
+"""Sparse-matrix substrate: structure containers, symbolic SpGEMM, BSR tiling.
+
+Structure-only matrices are represented as ``scipy.sparse.csr_matrix`` with
+boolean data; this module wraps the handful of structural operations the
+hypergraph layer needs so that `core/` never touches scipy directly.
+"""
+from repro.sparse.structure import (
+    SparseStructure,
+    from_coo,
+    from_dense,
+    random_structure,
+    spgemm_symbolic,
+    nontrivial_multiplications,
+)
+from repro.sparse.bsr import BlockSparse, to_bsr, bsr_to_dense
+
+__all__ = [
+    "SparseStructure",
+    "from_coo",
+    "from_dense",
+    "random_structure",
+    "spgemm_symbolic",
+    "nontrivial_multiplications",
+    "BlockSparse",
+    "to_bsr",
+    "bsr_to_dense",
+]

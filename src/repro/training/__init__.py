@@ -1,0 +1,13 @@
+"""Training substrate: optimizers, train/serve step builders, compression."""
+from repro.training.optimizer import adamw_init, adamw_update, adafactor_init, adafactor_update
+from repro.training.step import make_train_step, make_prefill_step, make_decode_step
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "adafactor_init",
+    "adafactor_update",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+]

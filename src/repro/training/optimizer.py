@@ -1,0 +1,131 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment,
+for the largest MoE configs where full Adam state would not fit HBM).
+
+States are plain pytrees mirroring the params tree, so they inherit the FSDP
+('data'-axis) sharding of their parameters (ZeRO-1 by construction under
+GSPMD: each data shard owns its slice of moments).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(zeros32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        mu_hat = mu / (1 - b1**cf)
+        nu_hat = nu / (1 - b2**cf)
+        step = mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern), factored second moment for matrices
+# ---------------------------------------------------------------------------
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def leaf(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(leaf, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads,
+    state,
+    params,
+    lr: float,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    count = state["count"] + 1
+    beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            )
+            cfac = jax.lax.rsqrt(vc)
+            u = g32 * rfac[..., None] * cfac[..., None, :]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = beta2 * v["v"] + (1 - beta2) * g2
+            u = g32 * jax.lax.rsqrt(vv)
+            new_v = {"v": vv}
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        newp = p.astype(jnp.float32) - lr * u
+        if weight_decay:
+            newp = newp - lr * weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    return new_p, {"v": new_v, "count": count}
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+}

@@ -1,0 +1,54 @@
+"""Train / serve step builders: pure functions of (state, batch), jit-ready
+with sharding annotations supplied by the launcher.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import train_loss, decode_step
+from repro.models.transformer import prefill_step
+from repro.training.optimizer import OPTIMIZERS
+
+
+def make_train_step(cfg, optimizer: str = "adamw", lr: float = 3e-4, clip: float = 1.0):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    The full production step: fwd + bwd (remat) + global-norm clip + update.
+    """
+    _, opt_update = OPTIMIZERS[optimizer]
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: train_loss(p, cfg, batch), has_aux=True
+        )(params)
+        # global-norm clip
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+        params, opt_state = opt_update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg):
+    def step(params, batch):
+        return prefill_step(params, cfg, batch)
+
+    return step
+
+
+def make_decode_step(cfg):
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+
+    return step

@@ -1,0 +1,195 @@
+"""Unit tests for the SpGEMM hypergraph models against the paper's own
+worked example (Fig. 1 / Fig. 3 / Fig. 4) and structural invariants."""
+import numpy as np
+import pytest
+
+from repro.core import SpGEMMInstance, build_model, MODELS
+from repro.core.spgemm_models import _lin_lookup
+from repro.sparse import from_dense, spgemm_symbolic
+from repro.sparse.structure import nontrivial_multiplications, random_structure
+
+
+# The Fig. 1 instance: reconstructed from the incidence submatrix of Fig. 4.
+# A-nets present: (0,0) (0,2) (1,0) (1,3) (2,1)  -> S_A
+# B-nets present: (0,1) (1,0) (2,0) (2,1) (3,1)  -> S_B
+# C-nets: (0,0) (0,1) (1,1) (2,0); mults: v020 v001 v021 v101 v131 v210
+A_FIG1 = np.array(
+    [
+        [1, 0, 1, 0],
+        [1, 0, 0, 1],
+        [0, 1, 0, 0],
+    ]
+)
+B_FIG1 = np.array(
+    [
+        [0, 1],
+        [1, 0],
+        [1, 1],
+        [0, 1],
+    ]
+)
+
+
+@pytest.fixture
+def fig1():
+    return SpGEMMInstance(from_dense(A_FIG1), from_dense(B_FIG1), name="fig1")
+
+
+def test_fig1_multiplications(fig1):
+    triples = set(zip(fig1.mult_i.tolist(), fig1.mult_k.tolist(), fig1.mult_j.tolist()))
+    assert triples == {
+        (0, 2, 0),
+        (0, 0, 1),
+        (0, 2, 1),
+        (1, 0, 1),
+        (1, 3, 1),
+        (2, 1, 0),
+    }
+    assert fig1.n_mult == 6
+
+
+def test_fig1_output_structure(fig1):
+    c = np.zeros((3, 2), dtype=bool)
+    r, col = fig1.c.coo()
+    c[r, col] = True
+    expected = np.array([[1, 1], [0, 1], [1, 0]], dtype=bool)
+    assert np.array_equal(c, expected)
+
+
+def test_fig1_fine_grained_counts(fig1):
+    hg = build_model(fig1, "fine", include_nz=True)
+    nA, nB, nC = 5, 5, 4
+    assert hg.n_vertices == 6 + nA + nB + nC
+    assert hg.n_nets == nA + nB + nC
+    # every mult vertex has exactly 3 pins; every nz vertex exactly 1
+    ptr, _ = hg.vertex_to_nets()
+    deg = np.diff(ptr)
+    assert (deg[:6] == 3).all()
+    assert (deg[6:] == 1).all()
+    # each net contains its nz vertex: sizes = 1 + #associated mults
+    assert hg.net_sizes().sum() == 6 * 3 + (nA + nB + nC)
+    assert (hg.net_cost == 1).all()
+    assert hg.total_comp() == 6
+
+
+def test_fig1_fine_no_nz(fig1):
+    hg = build_model(fig1, "fine", include_nz=False)
+    assert hg.n_vertices == 6
+    assert hg.n_nets == 14
+    assert hg.total_comp() == 6
+    assert hg.total_mem() == 0
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("include_nz", [False, True])
+def test_models_build_and_validate(model, include_nz):
+    rng = np.random.default_rng(42)
+    a = random_structure(17, 13, 0.2, rng)
+    b = random_structure(13, 19, 0.2, rng)
+    inst = SpGEMMInstance(a, b)
+    hg = build_model(inst, model, include_nz=include_nz)
+    hg.validate()
+    assert hg.n_vertices > 0
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_total_comp_equals_flops(model):
+    """All parallelization models must account for the same |V^m| flops."""
+    rng = np.random.default_rng(7)
+    a = random_structure(23, 17, 0.15, rng)
+    b = random_structure(17, 29, 0.15, rng)
+    inst = SpGEMMInstance(a, b)
+    hg = build_model(inst, model, include_nz=False)
+    assert hg.total_comp() == inst.n_mult
+
+
+def test_rowwise_weights_match_ex51():
+    rng = np.random.default_rng(3)
+    a = random_structure(11, 7, 0.3, rng)
+    b = random_structure(7, 9, 0.3, rng)
+    inst = SpGEMMInstance(a, b)
+    hg = build_model(inst, "rowwise", include_nz=True)
+    I, K = 11, 7
+    assert hg.n_vertices == I + K
+    assert hg.n_nets == K
+    # net cost = nnz of B row k
+    assert np.array_equal(hg.net_cost, b.row_counts())
+    # w_mem(v_i) = nnz(A row i) + nnz(C row i)
+    assert np.array_equal(hg.w_mem[:I], a.row_counts() + inst.c.row_counts())
+    # pins: between 1 (no v_i) + 1 and I + 1
+    assert (hg.net_sizes() <= I + 1).all()
+
+
+def test_outer_weights_match_ex52():
+    rng = np.random.default_rng(4)
+    a = random_structure(11, 7, 0.3, rng)
+    b = random_structure(7, 9, 0.3, rng)
+    inst = SpGEMMInstance(a, b)
+    hg = build_model(inst, "outer", include_nz=True)
+    K = 7
+    assert hg.n_vertices == K + inst.c.nnz
+    assert hg.n_nets == inst.c.nnz
+    assert np.array_equal(hg.w_comp[:K], a.col_counts() * b.row_counts())
+    assert np.array_equal(hg.w_mem[:K], a.col_counts() + b.row_counts())
+    assert (hg.net_cost == 1).all()
+
+
+def test_monoC_weights_match_ex54():
+    rng = np.random.default_rng(5)
+    a = random_structure(11, 7, 0.3, rng)
+    b = random_structure(7, 9, 0.3, rng)
+    inst = SpGEMMInstance(a, b)
+    hg = build_model(inst, "monoC", include_nz=True)
+    assert hg.n_vertices == inst.c.nnz + a.nnz + b.nnz
+    assert hg.n_nets == a.nnz + b.nnz
+    # w_comp(v_ij) = number of k contributing to (i,j); sums to |V^m|
+    assert hg.w_comp.sum() == inst.n_mult
+
+
+def test_columnwise_transpose_duality():
+    """column-wise on (A,B) == row-wise on (B^T, A^T) (C^T = B^T A^T)."""
+    rng = np.random.default_rng(6)
+    a = random_structure(12, 8, 0.25, rng)
+    b = random_structure(8, 10, 0.25, rng)
+    inst = SpGEMMInstance(a, b)
+    inst_t = SpGEMMInstance(b.transpose(), a.transpose())
+    col = build_model(inst, "columnwise", include_nz=False)
+    row_t = build_model(inst_t, "rowwise", include_nz=False)
+    assert col.n_vertices == row_t.n_vertices
+    assert col.n_nets == row_t.n_nets
+    assert np.array_equal(np.sort(col.net_cost), np.sort(row_t.net_cost))
+    assert np.array_equal(np.sort(col.w_comp), np.sort(row_t.w_comp))
+
+
+def test_lin_lookup_roundtrip():
+    rng = np.random.default_rng(8)
+    s = random_structure(20, 30, 0.1, rng)
+    r, c = s.coo()
+    pos = _lin_lookup(s, r, c)
+    assert np.array_equal(pos, np.arange(s.nnz))
+
+
+def test_spgemm_symbolic_matches_numpy():
+    rng = np.random.default_rng(9)
+    a = random_structure(15, 12, 0.2, rng)
+    b = random_structure(12, 18, 0.2, rng)
+    c = spgemm_symbolic(a, b)
+    ad = np.zeros((15, 12), bool)
+    bd = np.zeros((12, 18), bool)
+    ar, ac = a.coo()
+    ad[ar, ac] = True
+    br, bc = b.coo()
+    bd[br, bc] = True
+    cd = ad.astype(int) @ bd.astype(int) > 0
+    got = np.zeros((15, 18), bool)
+    cr, cc = c.coo()
+    got[cr, cc] = True
+    assert np.array_equal(got, cd)
+
+
+def test_mult_count_equals_flops_formula():
+    rng = np.random.default_rng(10)
+    a = random_structure(9, 14, 0.3, rng)
+    b = random_structure(14, 11, 0.3, rng)
+    i, k, j = nontrivial_multiplications(a, b)
+    assert len(i) == int((a.col_counts() * b.row_counts()).sum())

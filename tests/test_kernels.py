@@ -1,0 +1,147 @@
+"""Pallas kernel tests: shape/dtype sweeps, allclose vs the ref.py oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.bsr_spgemm import build_pair_lists
+from repro.sparse.bsr import to_bsr, bsr_to_dense, BlockSparse
+
+
+def _random_block_dense(rng, m, k, density, block):
+    """Dense matrix whose nonzero support is block-structured."""
+    gm, gk = m // block, k // block
+    mask = rng.random((gm, gk)) < density
+    if not mask.any():
+        mask[0, 0] = True
+    dense = rng.standard_normal((m, k)).astype(np.float32)
+    full = np.kron(mask, np.ones((block, block), bool))
+    return dense * full
+
+
+# ---------------------------------------------------------------------------
+# bsr_spmm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("block", [8, 16])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mn", [(32, 32, 16), (64, 32, 64)])
+def test_bsr_spmm_matches_oracle(block, dtype, mn):
+    m, k, n = mn
+    rng = np.random.default_rng(0)
+    a = _random_block_dense(rng, m, k, 0.4, block).astype(dtype)
+    b = rng.standard_normal((k, n)).astype(dtype)
+    bsr = to_bsr(np.asarray(a, np.float32), block, block)
+    bsr = BlockSparse(bsr.blocks.astype(dtype), bsr.brows, bsr.bcols, bsr.shape)
+    got = ops.spmm(bsr, b, interpret=True)
+    want = ops.bsr_spmm_ref(
+        jnp.asarray(bsr.blocks), jnp.asarray(bsr.brows), jnp.asarray(bsr.bcols),
+        jnp.asarray(b), m // block,
+    )
+    tol = 1e-5 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+    # and the oracle itself matches plain matmul
+    np.testing.assert_allclose(
+        np.asarray(want, np.float32),
+        np.asarray(a, np.float32) @ np.asarray(b, np.float32),
+        rtol=tol * 3,
+        atol=tol * 3,
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    gm=st.integers(2, 5),
+    gk=st.integers(2, 5),
+    n=st.sampled_from([8, 16]),
+    density=st.floats(0.2, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bsr_spmm_property(gm, gk, n, density, seed):
+    """Property: kernel == dense matmul for arbitrary block supports."""
+    block = 8
+    rng = np.random.default_rng(seed)
+    a = _random_block_dense(rng, gm * block, gk * block, density, block)
+    b = rng.standard_normal((gk * block, n)).astype(np.float32)
+    bsr = to_bsr(a, block, block)
+    got = np.asarray(ops.spmm(bsr, b, interpret=True))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bsr_spgemm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("block", [8, 16])
+@pytest.mark.parametrize("shape", [(32, 16, 48), (48, 48, 48)])
+def test_bsr_spgemm_matches_dense(block, shape):
+    m, k, n = shape
+    rng = np.random.default_rng(1)
+    a = _random_block_dense(rng, m, k, 0.5, block)
+    b = _random_block_dense(rng, k, n, 0.5, block)
+    ab, bb = to_bsr(a, block, block), to_bsr(b, block, block)
+    c_blocks, crows, ccols = ops.spgemm(ab, bb, interpret=True)
+    c = bsr_to_dense(
+        BlockSparse(np.asarray(c_blocks), crows, ccols, (m, n))
+    )
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_spgemm_pair_list_is_tiled_hypergraph():
+    """The inspector's pair list cardinality equals |V^m| of the coarsened
+    (block-level) SpGEMM hypergraph."""
+    from repro.core import SpGEMMInstance
+    from repro.sparse import from_coo
+
+    rng = np.random.default_rng(2)
+    block = 8
+    a = _random_block_dense(rng, 40, 32, 0.4, block)
+    b = _random_block_dense(rng, 32, 24, 0.4, block)
+    ab, bb = to_bsr(a, block, block), to_bsr(b, block, block)
+    pa, pb, pc, crows, ccols = build_pair_lists(ab.brows, ab.bcols, bb.brows, bb.bcols)
+    inst = SpGEMMInstance(ab.block_structure(), bb.block_structure())
+    assert len(pa) == inst.n_mult
+    assert len(crows) == inst.c.nnz
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    gm=st.integers(2, 4),
+    gk=st.integers(2, 4),
+    gn=st.integers(2, 4),
+    da=st.floats(0.25, 0.8),
+    db=st.floats(0.25, 0.8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bsr_spgemm_property(gm, gk, gn, da, db, seed):
+    block = 8
+    rng = np.random.default_rng(seed)
+    a = _random_block_dense(rng, gm * block, gk * block, da, block)
+    b = _random_block_dense(rng, gk * block, gn * block, db, block)
+    ab, bb = to_bsr(a, block, block), to_bsr(b, block, block)
+    c_blocks, crows, ccols = ops.spgemm(ab, bb, interpret=True)
+    c = bsr_to_dense(
+        BlockSparse(np.asarray(c_blocks), crows, ccols, (gm * block, gn * block))
+    )
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe_gemm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 16, 32, 24), (4, 128, 64, 16)])
+def test_moe_gemm_matches_oracle(dtype, shape):
+    E, C, d, f = shape
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((E, C, d)).astype(dtype)
+    w = rng.standard_normal((E, d, f)).astype(dtype)
+    got = ops.grouped_gemm(x, w, interpret=True)
+    want = ops.moe_gemm_ref(jnp.asarray(x), jnp.asarray(w))
+    tol = 1e-5 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )

@@ -1,0 +1,77 @@
+"""MoE dispatch planner tests: the hypergraph placement must beat naive
+contiguous placement on correlated routing, and the permutation must be
+valid + integrate with the MoE layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moe_planner import (
+    dispatch_instance,
+    plan_expert_placement,
+    routing_counts,
+)
+
+
+def _correlated_routing(T=4096, E=16, K=2, n_blocks=4, seed=0):
+    """Token span i prefers the expert block i mod n_blocks, but the expert
+    ids within a 'semantic' block are scattered across the naive layout."""
+    rng = np.random.default_rng(seed)
+    scattered = rng.permutation(E).reshape(n_blocks, E // n_blocks)
+    gate = np.empty((T, K), dtype=np.int64)
+    for t in range(T):
+        blk = (t * n_blocks) // T
+        gate[t] = rng.choice(scattered[blk], size=K, replace=False)
+    return gate
+
+
+def test_routing_counts_shape_and_total():
+    gate = _correlated_routing()
+    counts = routing_counts(gate, 16, 32)
+    assert counts.shape == (32, 16)
+    assert counts.sum() == gate.size
+
+
+def test_dispatch_instance_is_spgemm():
+    gate = _correlated_routing()
+    counts = routing_counts(gate, 16, 32)
+    inst = dispatch_instance(counts)
+    E, G, one = inst.shape
+    assert (E, G, one) == (16, 32, 1)
+    assert inst.n_mult == (counts > 0).sum()
+
+
+def test_planner_beats_contiguous_on_correlated_routing():
+    gate = _correlated_routing()
+    counts = routing_counts(gate, 16, 64)
+    plan = plan_expert_placement(counts, n_columns=4, seed=0)
+    # the planner must recover (most of) the scattered block structure
+    assert plan.comm_planned < plan.comm_contiguous
+    # permutation validity
+    assert sorted(plan.placement.tolist()) == list(range(16))
+    # column sizes exactly E/cols
+    assert (np.bincount(plan.column_of, minlength=4) == 4).all()
+
+
+def test_placement_integrates_with_moe_layer():
+    """moe_layer with a planner placement still computes a valid output."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_params, train_loss
+    import dataclasses
+
+    cfg = get_smoke_config("dbrx-132b")
+    gate = _correlated_routing(
+        T=512, E=cfg.moe.n_experts, K=cfg.moe.top_k, n_blocks=2
+    )
+    counts = routing_counts(gate, cfg.moe.n_experts, 16)
+    plan = plan_expert_placement(counts, n_columns=2)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, expert_placement=tuple(plan.placement))
+    )
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 64)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 64)), jnp.int32),
+    }
+    loss, _ = jax.jit(lambda p, b: train_loss(p, cfg, b))(params, batch)
+    assert jnp.isfinite(loss)

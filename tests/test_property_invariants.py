@@ -1,0 +1,104 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SpGEMMInstance, build_model, evaluate, partition
+from repro.core.coarsen import coarsen_vertices
+from repro.core.spgemm_models import MODELS
+from repro.sparse.structure import random_structure, spgemm_symbolic
+
+
+def _inst(seed, i, k, j, density):
+    rng = np.random.default_rng(seed)
+    a = random_structure(i, k, density, rng)
+    b = random_structure(k, j, density, rng)
+    return SpGEMMInstance(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    i=st.integers(4, 24),
+    k=st.integers(4, 20),
+    j=st.integers(4, 24),
+    density=st.floats(0.1, 0.5),
+    model=st.sampled_from(MODELS),
+    p=st.sampled_from([2, 3, 5]),
+)
+def test_comm_evaluation_invariants(seed, i, k, j, density, model, p):
+    inst = _inst(seed, i, k, j, density)
+    hg = build_model(inst, model)
+    rng = np.random.default_rng(seed)
+    parts = rng.integers(0, p, size=hg.n_vertices)
+    c = evaluate(hg, parts, p)
+    # 0 <= connectivity <= total volume <= p * connectivity
+    assert 0 <= c.connectivity <= c.total_volume <= p * max(c.connectivity, 1)
+    # expand + fold == connectivity
+    assert c.expand + c.fold == c.connectivity
+    # max part cost <= sum of all cut-net costs * 1 (each net counts once/part)
+    assert c.max_part_cost <= c.total_volume
+    # single part: zero communication
+    z = evaluate(hg, np.zeros(hg.n_vertices, dtype=np.int64), 1)
+    assert z.connectivity == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    p=st.sampled_from([2, 4]),
+)
+def test_partitioner_output_valid_and_no_worse_than_trivial(seed, p):
+    inst = _inst(seed, 20, 14, 18, 0.25)
+    hg = build_model(inst, "rowwise")
+    res = partition(hg, p, eps=0.5, seed=seed)
+    assert res.parts.shape == (hg.n_vertices,)
+    assert res.parts.min() >= 0 and res.parts.max() < p
+    # objective never exceeds the all-nets-cut ceiling
+    assert res.connectivity <= int(hg.net_cost.sum() * (p - 1))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), groups=st.integers(2, 8))
+def test_coarsening_never_increases_cut(seed, groups):
+    """For any partition REFINED by the coarse map, cut costs are identical;
+    coarsening can only restrict the solution space (Sec. 5)."""
+    inst = _inst(seed, 16, 12, 14, 0.3)
+    hg = build_model(inst, "fine")
+    rng = np.random.default_rng(seed)
+    cmap = rng.integers(0, groups, size=hg.n_vertices)
+    _, cmap = np.unique(cmap, return_inverse=True)
+    coarse = coarsen_vertices(hg, cmap)
+    # assign each coarse group a part; induce the fine partition
+    p = 3
+    coarse_parts = rng.integers(0, p, size=coarse.n_vertices)
+    fine_parts = coarse_parts[cmap]
+    c_fine = evaluate(hg, fine_parts, p)
+    c_coarse = evaluate(coarse, coarse_parts, p)
+    assert c_fine.connectivity == c_coarse.connectivity
+    assert c_fine.max_part_cost == c_coarse.max_part_cost
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    i=st.integers(3, 20),
+    k=st.integers(3, 16),
+    j=st.integers(3, 20),
+    density=st.floats(0.1, 0.6),
+)
+def test_symbolic_spgemm_matches_dense(seed, i, k, j, density):
+    rng = np.random.default_rng(seed)
+    a = random_structure(i, k, density, rng)
+    b = random_structure(k, j, density, rng)
+    c = spgemm_symbolic(a, b)
+    ad = np.zeros((i, k), bool)
+    ad[a.coo()] = True
+    bd = np.zeros((k, j), bool)
+    bd[b.coo()] = True
+    want = (ad @ bd)
+    got = np.zeros((i, j), bool)
+    got[c.coo()] = True
+    assert np.array_equal(got, want)
+    # |V^m| identity: sum_k nnz(A col k) * nnz(B row k)
+    inst = SpGEMMInstance(a, b)
+    assert inst.n_mult == int((a.col_counts() * b.row_counts()).sum())

@@ -1,0 +1,92 @@
+"""Sharding-rule unit tests: divisibility-aware spec fitting, serve overlay,
+batch sharding, parameter tree consistency for every architecture."""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_arch_ids, get_config
+from repro.models.sharding import (
+    _fit_spec,
+    batch_sharding,
+    param_logical_axes,
+    param_shardings,
+    serve_overlay,
+    spec_for,
+)
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()  # 1 device: ('data', 'model') sizes (1, 1)
+
+
+def test_fit_spec_drops_nondivisible_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    # 4 KV heads cannot shard over 16-way model
+    spec = _fit_spec(P(None, "model", None), (64, 4, 128), FakeMesh())
+    assert spec == P(None, None, None)
+    # 64 heads can
+    spec = _fit_spec(P(None, "model", None), (64, 64, 128), FakeMesh())
+    assert spec == P(None, "model", None)
+    # vocab 32001 not divisible -> replicate
+    spec = _fit_spec(P("model"), (32001,), FakeMesh())
+    assert spec == P(None)
+    # tuple axes: keep only the prefix that divides
+    spec = _fit_spec(P(("pod", "data")), (2,), _mk(pod=2, data=16))
+    assert spec == P("pod")
+
+
+def _mk(**sizes):
+    class FakeMesh:
+        axis_names = tuple(sizes)
+        shape = dict(sizes)
+
+    return FakeMesh()
+
+
+def test_batch_sharding_divisibility():
+    mesh = _mk(pod=2, data=16, model=16)
+
+    class M:
+        axis_names = mesh.axis_names
+        shape = mesh.shape
+
+    # full divisibility: both axes
+    import repro.models.sharding as sh
+
+    # use the real function with a real mesh of 1 device but fake sizes is
+    # not possible; test the pure logic through _fit_spec instead
+    spec = _fit_spec(P(("pod", "data")), (256,), M())
+    assert spec == P(("pod", "data"))
+    spec = _fit_spec(P(("pod", "data")), (1,), M())
+    assert spec == P(None)
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_param_shardings_tree_matches_params(arch, mesh):
+    cfg = get_config(arch)
+    sh = param_shardings(cfg, mesh)
+    from functools import partial
+    from repro.models import init_params
+
+    shapes = jax.eval_shape(partial(init_params, cfg), jax.random.key(0))
+    # same treedef
+    assert jax.tree.structure(sh) == jax.tree.structure(shapes)
+
+
+def test_serve_overlay_drops_fsdp_axis():
+    cfg = get_config("internlm2-1.8b")
+    axes = param_logical_axes(cfg)
+    served = serve_overlay(axes)
+    assert axes["embed"]["tokens"] == ("vocab", "embed_fsdp")
+    assert served["embed"]["tokens"] == ("vocab", None)
+    assert served["layers"]["attn"]["wq"][1] is None  # embed_fsdp dropped
+    assert served["layers"]["attn"]["wq"][2] == "heads"  # TP kept

@@ -1,0 +1,78 @@
+"""Optimizer + roofline-analyzer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.optimizer import (
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+)
+
+
+def _quadratic_problem():
+    target = {"w": jnp.array([1.0, -2.0, 3.0]), "m": jnp.ones((4, 5)) * 0.5}
+    params = jax.tree.map(jnp.zeros_like, target)
+
+    def loss(p):
+        return sum(
+            jnp.sum(jnp.square(a - b))
+            for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(target))
+        )
+
+    return params, loss
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_optimizer_converges_on_quadratic(opt):
+    params, loss = _quadratic_problem()
+    init, update = {
+        "adamw": (adamw_init, adamw_update),
+        "adafactor": (adafactor_init, adafactor_update),
+    }[opt]
+    state = init(params)
+    l0 = float(loss(params))
+    kw = {"weight_decay": 0.0} if opt == "adamw" else {}
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state = update(grads, state, params, lr=5e-2, **kw)
+    assert float(loss(params)) < l0 * 1e-2
+
+
+def test_adamw_state_shapes_match_params():
+    params = {"a": jnp.ones((3, 4)), "b": {"c": jnp.ones(7)}}
+    st = adamw_init(params)
+    assert jax.tree.structure(st["mu"]) == jax.tree.structure(params)
+    for m, p in zip(jax.tree.leaves(st["mu"]), jax.tree.leaves(params)):
+        assert m.shape == p.shape and m.dtype == jnp.float32
+
+
+def test_adafactor_factored_second_moment_is_small():
+    params = {"w": jnp.ones((128, 256))}
+    st = adafactor_init(params)
+    leaf = st["v"]["w"]
+    # factored: 128 + 256 numbers, not 128*256
+    assert leaf["vr"].shape == (128,) and leaf["vc"].shape == (256,)
+
+
+def test_roofline_analyzer_terms():
+    from benchmarks.roofline import analyze_record, PEAK_FLOPS, HBM_BW, ICI_BW
+
+    rec = {
+        "arch": "internlm2-1.8b",
+        "shape": "train_4k",
+        "mesh": "16x16",
+        "n_devices": 256,
+        "flops": PEAK_FLOPS,  # exactly one second of compute
+        "bytes_accessed": HBM_BW * 2.0,  # two seconds of memory
+        "wire_bytes": ICI_BW * 0.5,
+        "memory": {"argument_size_in_bytes": 1, "temp_size_in_bytes": 2},
+    }
+    a = analyze_record(rec)
+    assert abs(a["compute_s"] - 1.0) < 1e-9
+    assert abs(a["memory_s"] - 2.0) < 1e-9
+    assert abs(a["collective_s"] - 0.5) < 1e-9
+    assert a["dominant"] == "memory"
+    assert 0 < a["roofline_fraction"] < 1
