@@ -1,0 +1,121 @@
+"""Plan-construction micro-benchmark: loop inspector vs vectorized IR.
+
+Cells:
+- ``plan_build/loop`` and ``plan_build/vec``: the row-wise inspector on a
+  10k-row instance (the acceptance target: vectorized >= 10x faster while
+  producing byte-identical routing tables — the identity is asserted here,
+  not just reported).
+- ``pair_lists/loop`` and ``pair_lists/vec``: the BSR SpGEMM inspector.
+- ``plan_build/monoC``: the full 2D monochrome-C inspector pipeline
+  (tile -> model -> partition -> plan) at reduced size, reporting route
+  volumes (ideal vs padded) next to construction time.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SpGEMMInstance
+from repro.distributed.plan import build_rowwise_plan, build_rowwise_plan_loop
+from repro.kernels.bsr_spgemm import build_pair_lists, build_pair_lists_loop
+from repro.sparse.structure import random_structure
+
+
+def _time(fn, repeats: int) -> tuple[float, object]:
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(out_dir: str | None = None, quick: bool = True) -> list[dict]:
+    records = []
+    rng = np.random.default_rng(0)
+    I = 2_000 if quick else 10_000
+    K, J, p = I // 2, I // 2, 16
+    inst = SpGEMMInstance(
+        random_structure(I, K, 8.0 / K, rng),
+        random_structure(K, J, 8.0 / J, rng),
+        name=f"er{I//1000}k",
+    )
+    row_part = rng.integers(0, p, I)
+    b_part = rng.integers(0, p, K)
+
+    t_loop, plan_loop = _time(
+        lambda: build_rowwise_plan_loop(inst, row_part, p, b_part), repeats=1
+    )
+    t_vec, plan_vec = _time(
+        lambda: build_rowwise_plan(inst, row_part, p, b_part), repeats=3
+    )
+    identical = (
+        np.array_equal(plan_vec.send_idx, plan_loop.send_idx)
+        and np.array_equal(plan_vec.recv_key, plan_loop.recv_key)
+        and np.array_equal(plan_vec.local_rows, plan_loop.local_rows)
+        and np.array_equal(plan_vec.local_b_rows, plan_loop.local_b_rows)
+    )
+    assert identical, "vectorized rowwise plan diverged from the loop reference"
+    speedup = t_loop / max(t_vec, 1e-9)
+    for tag, t in (("loop", t_loop), ("vec", t_vec)):
+        records.append(
+            {
+                "name": f"{inst.name}/plan_build/{tag}/p{p}",
+                "status": "ok",
+                "us_per_call": int(t * 1e6),
+                "rows": I,
+                "ideal_words": plan_vec.comm_words_ideal,
+                "padded_words": plan_vec.comm_words_padded,
+                "byte_identical": identical,
+                "speedup_vs_loop": round(speedup, 1),
+            }
+        )
+
+    # BSR pair-list inspector on a block grid sized to the same instance
+    gb = 64 if quick else 160
+    na = nb = gb * 8
+    args = (
+        rng.integers(0, gb, na),
+        rng.integers(0, gb, na),
+        rng.integers(0, gb, nb),
+        rng.integers(0, gb, nb),
+    )
+    t_ploop, ref_lists = _time(lambda: build_pair_lists_loop(*args), repeats=1)
+    t_pvec, vec_lists = _time(lambda: build_pair_lists(*args), repeats=3)
+    assert all(np.array_equal(a, b) for a, b in zip(vec_lists, ref_lists))
+    for tag, t in (("loop", t_ploop), ("vec", t_pvec)):
+        records.append(
+            {
+                "name": f"bsr{gb}/pair_lists/{tag}",
+                "status": "ok",
+                "us_per_call": int(t * 1e6),
+                "pairs": len(ref_lists[0]),
+                "speedup_vs_loop": round(t_ploop / max(t_pvec, 1e-9), 1),
+            }
+        )
+
+    # full monoC inspector pipeline + executor (when the process owns >= p
+    # devices; plan metrics are device-independent either way)
+    from benchmarks.common import run_monoC_cell
+
+    n = 96 if quick else 256
+    a = (rng.random((n, n)) < 0.08) * rng.standard_normal((n, n)).astype(np.float32)
+    b = (rng.random((n, n)) < 0.08) * rng.standard_normal((n, n)).astype(np.float32)
+    records.append(run_monoC_cell(a, b, block=8, p=4, tag=f"/n{n}"))
+
+    if out_dir:
+        from benchmarks.common import emit
+
+        emit(records, out_dir, "plan_build.json")
+    return records
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="10k-row acceptance run")
+    args = ap.parse_args()
+    for r in run(quick=not args.full):
+        print(r)

@@ -69,6 +69,66 @@ def run_cell(
     }
 
 
+def run_monoC_cell(
+    a_dense: np.ndarray,
+    b_dense: np.ndarray,
+    block: int,
+    p: int,
+    eps: float = 0.10,
+    seed: int = 0,
+    tag: str = "",
+) -> dict:
+    """Plan-build + executor cell for the 2D monochrome-C model.
+
+    Times the full inspector pipeline (tile -> model -> partition -> plan
+    IR) and, when the process owns >= p devices, the executor pass through
+    the BSR kernel path on a 2D mesh (oracle-checked against dense A @ B).
+    With fewer devices the executor step is reported as skipped — plan
+    metrics (ideal vs padded volume, pair counts) are device-independent.
+    """
+    from repro.distributed.plan_ir import plan_monoC_from_dense
+
+    name = f"monoC_exec/b{block}/p{p}{tag}"
+    t0 = time.time()
+    plan, inst = plan_monoC_from_dense(a_dense, b_dense, block, p, eps=eps, seed=seed)
+    plan_s = time.time() - t0
+    rec = {
+        "name": name,
+        "status": "ok",
+        "us_per_call": int(plan_s * 1e6),
+        "plan_s": round(plan_s, 3),
+        "ideal_words": plan.comm_words_ideal,
+        "padded_words": plan.comm_words_padded,
+        "padding_fraction": round(plan.padding_fraction, 3),
+        "n_pairs": plan.stats["n_pairs"],
+        "pairs_padded": plan.stats["pairs_padded"],
+    }
+    import jax
+
+    if jax.device_count() >= p and p % 2 == 0:
+        from jax.sharding import Mesh
+
+        from repro.distributed import monoC_spgemm
+        from repro.distributed.spgemm_exec import unpack_monoC_result
+
+        mesh = Mesh(np.array(jax.devices()[:p]).reshape(2, p // 2), ("x", "y"))
+        t0 = time.time()
+        c_local = monoC_spgemm(a_dense, b_dense, plan, mesh, block=block)
+        np.asarray(c_local)  # block until done
+        rec["exec_s"] = round(time.time() - t0, 3)
+        gr, gc = inst.c.shape
+        got = unpack_monoC_result(c_local, plan, inst.c, (gr * block, gc * block))
+        want = a_dense @ b_dense
+        rec["exec_max_err"] = float(
+            np.abs(got[: want.shape[0], : want.shape[1]] - want).max()
+        )
+    elif p % 2 != 0:
+        rec["exec"] = f"skipped (odd p={p}; executor mesh is (2, p//2))"
+    else:
+        rec["exec"] = f"skipped ({jax.device_count()} device(s) < p={p})"
+    return rec
+
+
 def run_geometric_cell(inst, model: str, p: int, parts: np.ndarray, tag: str) -> dict:
     """Evaluate a geometric (non-partitioner) baseline on a model hypergraph."""
     hg = build_model(inst, model)

@@ -10,7 +10,7 @@ import argparse
 import sys
 
 from benchmarks import bench_amg, bench_bounds, bench_kernels, bench_lp, bench_mcl, bench_tab2
-from benchmarks import roofline
+from benchmarks import bench_plan_build, roofline
 from benchmarks.common import csv_lines
 
 SUITES = {
@@ -20,6 +20,7 @@ SUITES = {
     "mcl": bench_mcl.run,
     "bounds": bench_bounds.run,
     "kernels": bench_kernels.run,
+    "plan": bench_plan_build.run,
     "roofline": roofline.run,
 }
 

@@ -56,9 +56,15 @@ def _match_vertices(
     rows, cols = net_ids[keep], hg.net_pins[keep]
     w = np.sqrt(hg.net_cost[rows].astype(np.float64) / np.maximum(sizes[rows] - 1, 1))
     W = sp.coo_matrix((w, (rows, cols)), shape=(hg.n_nets, hg.n_vertices)).tocsr()
-    S = (W.T @ W).tocsr()
-    S.setdiag(0)
-    S.eliminate_zeros()
+    # drop the diagonal via an explicit COO filter: csr.setdiag(0) in scipy
+    # 1.14 corrupts neighbouring entries when nearly the whole diagonal is
+    # stored (stale offsets after _insert_many), leaving self-similarities
+    # that make vertices match themselves
+    S = (W.T @ W).tocoo()
+    off_diag = S.row != S.col
+    S = sp.csr_matrix(
+        (S.data[off_diag], (S.row[off_diag], S.col[off_diag])), shape=S.shape
+    )
     n = hg.n_vertices
     best = np.full(n, -1, dtype=np.int64)
     score = np.zeros(n, dtype=np.float64)

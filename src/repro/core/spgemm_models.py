@@ -14,6 +14,8 @@ Net kinds: 1/2/3 = A/B/C nets.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 from repro.core.hypergraph import Hypergraph, build_hypergraph_flat
@@ -45,8 +47,12 @@ def _lin_lookup(struct: SparseStructure, rows: np.ndarray, cols: np.ndarray) -> 
     lin_sorted = r * n_cols + c  # CSR order is sorted by (row, col)
     query = rows * n_cols + cols
     pos = np.searchsorted(lin_sorted, query)
-    if len(lin_sorted) and not np.array_equal(lin_sorted[pos], query):
-        raise KeyError("query coordinates not all nonzero")
+    # out-of-range queries return len(lin_sorted); clip before the gather so
+    # they fail the membership check below instead of raising IndexError
+    safe = np.minimum(pos, max(len(lin_sorted) - 1, 0))
+    if not len(lin_sorted) or not np.array_equal(lin_sorted[safe], query):
+        if len(query):
+            raise KeyError("query coordinates not all nonzero")
     return pos.astype(np.int64)
 
 
@@ -79,6 +85,30 @@ class SpGEMMInstance:
     def shape(self) -> tuple[int, int, int]:
         return self.a.shape[0], self.a.shape[1], self.b.shape[1]
 
+    # -- plan-facing accessors (cached) ------------------------------------
+    # The model builders and the plan IR both need the multiplication space
+    # expressed in CSR nonzero ids and A in CSC form; cache them so the
+    # inspector does each index computation once per instance.
+    @functools.cached_property
+    def a_csc(self):
+        """A in CSC form (column-major iteration of the multiplication space)."""
+        return self.a.tocsc()
+
+    @functools.cached_property
+    def mult_a_pos(self) -> np.ndarray:
+        """CSR nonzero id of a_ik for every multiplication triple."""
+        return _lin_lookup(self.a, self.mult_i, self.mult_k)
+
+    @functools.cached_property
+    def mult_b_pos(self) -> np.ndarray:
+        """CSR nonzero id of b_kj for every multiplication triple."""
+        return _lin_lookup(self.b, self.mult_k, self.mult_j)
+
+    @functools.cached_property
+    def mult_c_pos(self) -> np.ndarray:
+        """CSR nonzero id of c_ij for every multiplication triple."""
+        return _lin_lookup(self.c, self.mult_i, self.mult_j)
+
     def stats(self) -> dict:
         """Table II row."""
         I, K, J = self.shape
@@ -109,9 +139,9 @@ def _build_fine(inst: SpGEMMInstance, include_nz: bool) -> Hypergraph:
     nA, nB, nC = a.nnz, b.nnz, c.nnz
 
     # net ids: A nets [0, nA), B nets [nA, nA+nB), C nets [nA+nB, nA+nB+nC)
-    a_pos = _lin_lookup(a, inst.mult_i, inst.mult_k)
-    b_pos = _lin_lookup(b, inst.mult_k, inst.mult_j)
-    c_pos = _lin_lookup(c, inst.mult_i, inst.mult_j)
+    a_pos = inst.mult_a_pos
+    b_pos = inst.mult_b_pos
+    c_pos = inst.mult_c_pos
 
     mult_ids = np.arange(M, dtype=np.int64)
     net_ids = [a_pos, nA + b_pos, nA + nB + c_pos]
@@ -172,7 +202,7 @@ def _build_rowwise(inst: SpGEMMInstance, include_nz: bool) -> Hypergraph:
     # vertices: v_i (i in [I]) [+ v^B_k]
     n_vertices = I + (K if include_nz else 0)
     # nets: n^B_k = {v_i : (i,k) in S_A} [+ {v^B_k}]; cost = nnz(B row k)
-    acsc = a.tocsc()
+    acsc = inst.a_csc
     net_ids = np.repeat(np.arange(K, dtype=np.int64), np.diff(acsc.indptr))
     pin_vs = acsc.indices.astype(np.int64)
     if include_nz:
@@ -257,7 +287,7 @@ def _build_outer(inst: SpGEMMInstance, include_nz: bool) -> Hypergraph:
     # vertices: v_k [+ v^C_ij]
     n_vertices = K + (nC if include_nz else 0)
     # nets: n^C_ij = {v_k : contributes to (i,j)} [+ {v^C_ij}]; cost 1.
-    c_pos = _lin_lookup(c, inst.mult_i, inst.mult_j)
+    c_pos = inst.mult_c_pos
     # dedupe (k contributes once per (i,j) even though pins derive from mults)
     pair = c_pos * K + inst.mult_k
     uniq = np.unique(pair)
@@ -307,8 +337,8 @@ def _build_monoA(inst: SpGEMMInstance, include_nz: bool) -> Hypergraph:
     netB_ids = np.repeat(np.arange(K, dtype=np.int64), np.diff(csc_ptr))
     netB_pins = csr_pos
     # nets n^C_ij = {v_ik : k contributes to (i,j)}, cost 1 — from mult triples
-    a_pos = _lin_lookup(a, inst.mult_i, inst.mult_k)
-    c_pos = _lin_lookup(c, inst.mult_i, inst.mult_j)
+    a_pos = inst.mult_a_pos
+    c_pos = inst.mult_c_pos
     netC_ids = K + c_pos
     netC_pins = a_pos
 
@@ -366,8 +396,8 @@ def _build_monoB(inst: SpGEMMInstance, include_nz: bool) -> Hypergraph:
     netA_ids = np.repeat(np.arange(K, dtype=np.int64), np.diff(bcsr.indptr))
     netA_pins = np.arange(nB, dtype=np.int64)  # CSR order groups by row k
     # nets n^C_ij = {v_kj : k contributes}, cost 1
-    b_pos = _lin_lookup(b, inst.mult_k, inst.mult_j)
-    c_pos = _lin_lookup(c, inst.mult_i, inst.mult_j)
+    b_pos = inst.mult_b_pos
+    c_pos = inst.mult_c_pos
     netC_ids = K + c_pos
     netC_pins = b_pos
 
@@ -419,9 +449,9 @@ def _build_monoC(inst: SpGEMMInstance, include_nz: bool) -> Hypergraph:
     # vertices: v_ij ((i,j) in S_C) [+ v^A_ik + v^B_kj]
     n_vertices = nC + ((nA + nB) if include_nz else 0)
 
-    a_pos = _lin_lookup(a, inst.mult_i, inst.mult_k)
-    b_pos = _lin_lookup(b, inst.mult_k, inst.mult_j)
-    c_pos = _lin_lookup(c, inst.mult_i, inst.mult_j)
+    a_pos = inst.mult_a_pos
+    b_pos = inst.mult_b_pos
+    c_pos = inst.mult_c_pos
     # nets n^A_ik = {v_ij : (k,j) in S_B}, cost 1 (dedupe per (ik, ij))
     pairA = np.unique(a_pos * nC + c_pos)
     netA_ids, netA_pins = pairA // nC, pairA % nC

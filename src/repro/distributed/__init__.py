@@ -1,17 +1,34 @@
 """Distributed SpGEMM executors (shard_map) + inspector-executor planning."""
-from repro.distributed.plan import RowwisePlan, build_rowwise_plan, OuterPlan, build_outer_plan
+from repro.distributed.plan_ir import (
+    ExecutionPlan,
+    MonoCPlan,
+    OuterPlan,
+    Route,
+    RowwisePlan,
+    build_monoC_plan,
+    build_outer_plan,
+    build_rowwise_plan,
+)
+from repro.distributed.plan import build_rowwise_plan_loop
 from repro.distributed.spgemm_exec import (
-    rowwise_spgemm,
+    monoC_spgemm,
     outer_product_spgemm,
+    rowwise_spgemm,
     spsumma,
 )
 
 __all__ = [
+    "ExecutionPlan",
+    "Route",
     "RowwisePlan",
-    "build_rowwise_plan",
     "OuterPlan",
+    "MonoCPlan",
+    "build_rowwise_plan",
+    "build_rowwise_plan_loop",
     "build_outer_plan",
+    "build_monoC_plan",
     "rowwise_spgemm",
     "outer_product_spgemm",
+    "monoC_spgemm",
     "spsumma",
 ]

@@ -1,8 +1,13 @@
 """Inspector phase: lower a hypergraph partition to a static execution plan.
 
-The partition of the row-wise (or outer-product) model decides ownership; the
-plan materializes, with static padded shapes, exactly the data movement the
-hypergraph cut prescribes:
+The partition of a model decides ownership; the plan materializes, with
+static padded shapes, exactly the data movement the hypergraph cut
+prescribes.  The plan containers and the vectorized builders live in
+``plan_ir`` (one ``ExecutionPlan`` IR for every model); this module
+re-exports them and keeps the original loop-based row-wise inspector as an
+executable specification — ``tests/test_plan_ir.py`` pins the vectorized
+builder to it byte for byte, and ``benchmarks/bench_plan_build.py`` measures
+the speedup.
 
 - row-wise: device d owns row set R_d of A and C, and row set S_d of B (the
   partition of V^B, or round-robin when V^nz was omitted).  The expand phase
@@ -11,6 +16,8 @@ hypergraph cut prescribes:
   (lambda(n) - 1) plus padding.  Realized as a single padded all_to_all.
 - outer-product: device d owns column set K_d of A and B-row set K_d; the
   fold phase routes partial C rows to C's owner.
+- monochrome-C: device d owns a C-nonzero set; two expand phases ship the
+  cut A- and B-nets, local compute streams BSR pair lists (see ``plan_ir``).
 
 All index arrays are padded to per-pair maxima so XLA sees static shapes; the
 padding fraction is reported so benchmarks can quantify executor overhead vs
@@ -18,38 +25,42 @@ the combinatorial volume.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
 
 from repro.core.spgemm_models import SpGEMMInstance
+from repro.distributed.plan_ir import (  # noqa: F401  (re-exports)
+    ExecutionPlan,
+    MonoCPlan,
+    OuterPlan,
+    Route,
+    RowwisePlan,
+    build_monoC_plan,
+    build_outer_plan,
+    build_rowwise_plan,
+)
+
+__all__ = [
+    "ExecutionPlan",
+    "Route",
+    "RowwisePlan",
+    "OuterPlan",
+    "MonoCPlan",
+    "build_rowwise_plan",
+    "build_outer_plan",
+    "build_monoC_plan",
+    "build_rowwise_plan_loop",
+]
 
 
-@dataclasses.dataclass
-class RowwisePlan:
-    p: int
-    row_part: np.ndarray  # (I,) owner of each A/C row
-    b_part: np.ndarray  # (K,) owner of each B row
-    # per-device padded local row ids (I_max,) with -1 padding
-    local_rows: np.ndarray  # (p, I_max)
-    # expand-phase routing: send_idx[s, d, t] = local index (into s's B rows)
-    # of the t-th B row device s ships to device d; -1 = padding
-    send_idx: np.ndarray  # (p, p, T_max)
-    # after the all_to_all, device d holds recv[s, t] slots; gather_idx maps
-    # global B row k -> position in d's receive buffer (K,) per device
-    recv_key: np.ndarray  # (p, p, T_max) global B-row id or -1
-    local_b_rows: np.ndarray  # (p, K_max) B rows owned per device, -1 pad
-    padding_fraction: float
-    comm_words_ideal: int  # hypergraph connectivity volume (rows)
-    comm_words_padded: int  # p*p*T_max actually shipped
-
-
-def build_rowwise_plan(
+def build_rowwise_plan_loop(
     inst: SpGEMMInstance,
     row_part: np.ndarray,
     p: int,
     b_part: np.ndarray | None = None,
 ) -> RowwisePlan:
+    """Original per-k Python-loop inspector, kept as the executable
+    specification of ``plan_ir.build_rowwise_plan`` (which must reproduce
+    its routing tables byte for byte)."""
     I, K, J = inst.shape
     row_part = np.asarray(row_part, dtype=np.int64)
     if b_part is None:
@@ -101,52 +112,17 @@ def build_rowwise_plan(
 
     padded = p * p * T_max if ideal else 0
     return RowwisePlan(
+        model="rowwise",
         p=p,
-        row_part=row_part,
-        b_part=b_part,
-        local_rows=local_rows,
-        send_idx=send_idx,
-        recv_key=recv_key,
-        local_b_rows=local_b_rows,
-        padding_fraction=(padded - ideal) / max(padded, 1),
-        comm_words_ideal=ideal,
-        comm_words_padded=padded,
-    )
-
-
-@dataclasses.dataclass
-class OuterPlan:
-    p: int
-    k_part: np.ndarray  # (K,) owner of each A column / B row
-    c_part: np.ndarray  # (I,) owner of each C row (fold destinations)
-    local_ks: np.ndarray  # (p, K_max) columns owned per device, -1 pad
-    comm_words_ideal: int  # fold volume in C entries (connectivity metric)
-
-
-def build_outer_plan(
-    inst: SpGEMMInstance,
-    k_part: np.ndarray,
-    p: int,
-    c_part: np.ndarray | None = None,
-) -> OuterPlan:
-    I, K, J = inst.shape
-    k_part = np.asarray(k_part, dtype=np.int64)
-    if c_part is None:
-        c_part = np.arange(I, dtype=np.int64) % p
-    ks_by_dev = [np.flatnonzero(k_part == d) for d in range(p)]
-    K_max = max(max((len(x) for x in ks_by_dev), default=1), 1)
-    local_ks = np.full((p, K_max), -1, dtype=np.int64)
-    for d in range(p):
-        local_ks[d, : len(ks_by_dev[d])] = ks_by_dev[d]
-    # ideal fold volume: per C nonzero, (#distinct contributing k-parts - 1)
-    cpos = inst.mult_i * J + inst.mult_j
-    pair = np.unique(cpos * p + k_part[inst.mult_k])
-    lam = np.bincount(pair // p)
-    ideal = int(np.maximum(lam[lam > 0] - 1, 0).sum())
-    return OuterPlan(
-        p=p,
-        k_part=k_part,
-        c_part=c_part,
-        local_ks=local_ks,
-        comm_words_ideal=ideal,
+        ownership={"a_row": row_part, "b_row": np.asarray(b_part, dtype=np.int64)},
+        local_ids={"a_row": local_rows, "b_row": local_b_rows},
+        routes={
+            "expand": Route(
+                payload="B",
+                send_idx=send_idx,
+                recv_key=recv_key,
+                items_ideal=ideal,
+                items_padded=padded,
+            )
+        },
     )

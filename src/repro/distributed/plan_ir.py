@@ -1,0 +1,463 @@
+"""Plan IR: one model-agnostic description of a lowered SpGEMM execution.
+
+The paper's central claim is that a hypergraph partition *is* an SpGEMM
+algorithm: the cut prescribes exactly the data movement.  ``ExecutionPlan``
+is that prescription made concrete — the inspector output every executor in
+``spgemm_exec`` consumes, whichever of the seven models produced it:
+
+- **ownership**: global-id -> part maps, one per object family the model
+  distributes ("a_row", "b_nz", "c_nz", ...).
+- **local_ids**: per-device padded id lists (p, N_max) with -1 padding —
+  the device-major inverse of each ownership map.
+- **routes**: padded all_to_all routing tables (``Route``), one per expand
+  phase.  A route realizes the cut nets of one operand: item t shipped from
+  s to d is exactly one (cut net, touched part) pair of the partition, plus
+  padding to the per-pair maximum so XLA sees static shapes.
+- **compute**: per-device local work lists (e.g. the (pair_a, pair_b,
+  pair_c) block multiplication lists the BSR kernel streams through).
+- **stats**: scalar accounting that is not a routing table (fold volumes,
+  pair counts).
+
+Ideal (connectivity-metric) vs padded volume is tracked per route so
+benchmarks can quantify executor overhead against the combinatorial cost
+the partitioner minimized.
+
+Plan *construction* is fully vectorized: every builder lowers a partition
+to routing tables with CSR/CSC index arithmetic (``np.unique`` on encoded
+(item, destination) keys, stable argsorts, bincount offsets) — no per-row
+Python loops.  ``plan.py`` keeps the original loop-based rowwise builder as
+an executable specification; ``tests/test_plan_ir.py`` pins byte-identical
+equality between the two, and ``benchmarks/bench_plan_build.py`` measures
+the speedup.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.spgemm_models import SpGEMMInstance
+
+
+# ---------------------------------------------------------------------------
+# IR containers
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Route:
+    """One padded all_to_all expand phase.
+
+    ``send_idx[s, d, t]`` is the *local* slot (into the sender's owned-item
+    list) of the t-th item device s ships to device d; ``recv_key[s, d, t]``
+    is that item's *global* id; -1 marks padding in both.  ``word_size`` is
+    the payload words per item (a B row of J words, a b x b block, ...), so
+    route volumes compose into word counts.
+    """
+
+    payload: str  # which operand moves: "A" | "B" | "C"
+    send_idx: np.ndarray  # (p, p, T) int64, -1 padding
+    recv_key: np.ndarray  # (p, p, T) int64 global item ids, -1 padding
+    items_ideal: int  # (cut net, touched part) pairs = connectivity volume
+    items_padded: int  # p * p * T actually shipped
+    word_size: int = 1
+
+    @property
+    def T(self) -> int:
+        return self.send_idx.shape[-1]
+
+    @property
+    def padding_fraction(self) -> float:
+        return (self.items_padded - self.items_ideal) / max(self.items_padded, 1)
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Model-agnostic inspector output: ownership + routing + local work."""
+
+    model: str
+    p: int
+    ownership: dict[str, np.ndarray]
+    local_ids: dict[str, np.ndarray]
+    routes: dict[str, Route] = dataclasses.field(default_factory=dict)
+    compute: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def comm_words_ideal(self) -> int:
+        route_words = sum(r.items_ideal * r.word_size for r in self.routes.values())
+        return int(route_words + self.stats.get("fold_words_ideal", 0))
+
+    @property
+    def comm_words_padded(self) -> int:
+        route_words = sum(r.items_padded * r.word_size for r in self.routes.values())
+        return int(route_words + self.stats.get("fold_words_padded", 0))
+
+    @property
+    def padding_fraction(self) -> float:
+        padded = self.comm_words_padded
+        return (padded - self.comm_words_ideal) / max(padded, 1)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized construction primitives
+# ---------------------------------------------------------------------------
+def padded_id_lists(part: np.ndarray, p: int) -> tuple[np.ndarray, np.ndarray]:
+    """Invert an ownership map into device-major padded id lists.
+
+    Returns ``(local_ids, local_of)``: ``local_ids[d]`` lists the global ids
+    owned by part d in ascending order (-1 padded to the per-part maximum,
+    floor 1), and ``local_of[g]`` is g's position within its owner's list.
+    """
+    part = np.asarray(part, dtype=np.int64)
+    n = len(part)
+    order = np.argsort(part, kind="stable")  # groups by part, ids ascending
+    counts = np.bincount(part, minlength=p) if n else np.zeros(p, dtype=np.int64)
+    n_max = max(int(counts.max(initial=0)), 1)
+    starts = np.cumsum(counts) - counts
+    rank = np.arange(n, dtype=np.int64) - np.repeat(starts, counts)
+    local_ids = np.full((p, n_max), -1, dtype=np.int64)
+    local_ids[part[order], rank] = order
+    local_of = np.empty(n, dtype=np.int64)
+    local_of[order] = rank
+    return local_ids, local_of
+
+
+def build_route(
+    src: np.ndarray,
+    dst: np.ndarray,
+    item: np.ndarray,
+    local_of: np.ndarray,
+    p: int,
+    payload: str,
+    word_size: int = 1,
+) -> Route:
+    """Lower a transfer list to a padded all_to_all routing table.
+
+    ``(src[t], dst[t], item[t])`` enumerates every (cut net, touched part)
+    pair — one shipped item per entry, ``dst != src`` already enforced.
+    Entries must arrive sorted by item id; the stable per-(src, dst) grouping
+    then keeps items ascending inside each cell, matching the loop-based
+    reference builder byte for byte.
+    """
+    n = len(item)
+    order = np.argsort(src * p + dst, kind="stable")
+    s_o, d_o, it_o = src[order], dst[order], item[order]
+    key = s_o * p + d_o
+    _, counts = np.unique(key, return_counts=True)
+    T = max(int(counts.max(initial=0)), 1)
+    starts = np.cumsum(counts) - counts
+    slot = np.arange(n, dtype=np.int64) - np.repeat(starts, counts)
+    send_idx = np.full((p, p, T), -1, dtype=np.int64)
+    recv_key = np.full((p, p, T), -1, dtype=np.int64)
+    send_idx[s_o, d_o, slot] = local_of[it_o]
+    recv_key[s_o, d_o, slot] = it_o
+    return Route(
+        payload=payload,
+        send_idx=send_idx,
+        recv_key=recv_key,
+        items_ideal=n,
+        items_padded=p * p * T if n else 0,
+        word_size=word_size,
+    )
+
+
+def _expand_transfers(
+    item_of_need: np.ndarray,
+    part_of_need: np.ndarray,
+    item_owner: np.ndarray,
+    p: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deduplicate (item, consuming part) incidences into transfers.
+
+    ``item_of_need[t]`` needs to be visible on ``part_of_need[t]`` (one entry
+    per pin of the item's net); returns the unique (src, dst, item) transfer
+    triples with dst != owner, sorted by item — the exact cut-net traffic
+    sum_n c(n) * (lambda(n) - 1) of the partition.
+    """
+    pairs = np.unique(item_of_need * p + part_of_need)  # sorted by (item, part)
+    items, dsts = pairs // p, pairs % p
+    srcs = item_owner[items]
+    keep = dsts != srcs
+    return srcs[keep], dsts[keep], items[keep]
+
+
+# ---------------------------------------------------------------------------
+# 1D row-wise (Ex. 5.1)
+# ---------------------------------------------------------------------------
+class RowwisePlan(ExecutionPlan):
+    """Row-wise plan: device d owns A/C row set R_d and B row set S_d; one
+    expand route ships each cut B-net (B row) to every part whose A-columns
+    touch it.  Legacy field names are accessors into the IR."""
+
+    @property
+    def row_part(self) -> np.ndarray:
+        return self.ownership["a_row"]
+
+    @property
+    def b_part(self) -> np.ndarray:
+        return self.ownership["b_row"]
+
+    @property
+    def local_rows(self) -> np.ndarray:
+        return self.local_ids["a_row"]
+
+    @property
+    def local_b_rows(self) -> np.ndarray:
+        return self.local_ids["b_row"]
+
+    @property
+    def send_idx(self) -> np.ndarray:
+        return self.routes["expand"].send_idx
+
+    @property
+    def recv_key(self) -> np.ndarray:
+        return self.routes["expand"].recv_key
+
+
+def build_rowwise_plan(
+    inst: SpGEMMInstance,
+    row_part: np.ndarray,
+    p: int,
+    b_part: np.ndarray | None = None,
+) -> RowwisePlan:
+    """Vectorized inspector for the row-wise model (CSC index arithmetic;
+    see ``plan.build_rowwise_plan_loop`` for the executable specification)."""
+    I, K, J = inst.shape
+    row_part = np.asarray(row_part, dtype=np.int64)
+    if b_part is None:
+        # default B distribution: round-robin rows (paper Sec. 6: V^nz omitted)
+        b_part = np.arange(K, dtype=np.int64) % p
+    else:
+        b_part = np.asarray(b_part, dtype=np.int64)
+
+    # B row k is needed wherever A column k has a nonzero: one incidence per
+    # A nonzero, deduplicated to (k, part) pairs
+    acsc = inst.a_csc
+    ks = np.repeat(np.arange(K, dtype=np.int64), np.diff(acsc.indptr))
+    src, dst, items = _expand_transfers(
+        ks, row_part[acsc.indices.astype(np.int64)], b_part, p
+    )
+    local_b_rows, local_of_b = padded_id_lists(b_part, p)
+    route = build_route(src, dst, items, local_of_b, p, payload="B")
+    local_rows, _ = padded_id_lists(row_part, p)
+    return RowwisePlan(
+        model="rowwise",
+        p=p,
+        ownership={"a_row": row_part, "b_row": b_part},
+        local_ids={"a_row": local_rows, "b_row": local_b_rows},
+        routes={"expand": route},
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1D outer-product (Ex. 5.2)
+# ---------------------------------------------------------------------------
+class OuterPlan(ExecutionPlan):
+    """Outer-product plan: device d owns A-column/B-row set K_d; the fold
+    phase (psum_scatter over C row blocks) carries the C-net volume."""
+
+    @property
+    def k_part(self) -> np.ndarray:
+        return self.ownership["k"]
+
+    @property
+    def c_part(self) -> np.ndarray:
+        return self.ownership["c_row"]
+
+    @property
+    def local_ks(self) -> np.ndarray:
+        return self.local_ids["k"]
+
+
+def build_outer_plan(
+    inst: SpGEMMInstance,
+    k_part: np.ndarray,
+    p: int,
+    c_part: np.ndarray | None = None,
+) -> OuterPlan:
+    I, K, J = inst.shape
+    k_part = np.asarray(k_part, dtype=np.int64)
+    if c_part is None:
+        c_part = np.arange(I, dtype=np.int64) % p
+    else:
+        c_part = np.asarray(c_part, dtype=np.int64)
+    local_ks, _ = padded_id_lists(k_part, p)
+    # ideal fold volume: per C nonzero, (#distinct contributing k-parts - 1)
+    cpos = inst.mult_i * J + inst.mult_j
+    pair = np.unique(cpos * p + k_part[inst.mult_k])
+    lam = np.bincount(pair // p)
+    ideal = int(np.maximum(lam[lam > 0] - 1, 0).sum())
+    # realized fold: the executor's psum_scatter reduces dense padded C row
+    # blocks regardless of sparsity — every device ships (p-1)/p of I_pad * J
+    I_pad = (I + p - 1) // p * p
+    padded = I_pad * (p - 1) * J if p > 1 else 0
+    return OuterPlan(
+        model="outer",
+        p=p,
+        ownership={"k": k_part, "c_row": c_part},
+        local_ids={"k": local_ks},
+        stats={"fold_words_ideal": ideal, "fold_words_padded": padded},
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2D monochrome-C (Ex. 5.4)
+# ---------------------------------------------------------------------------
+class MonoCPlan(ExecutionPlan):
+    """Monochrome-C plan over a (block) SpGEMM instance.
+
+    Vertices of the monoC hypergraph are C nonzeros; a partition of them is
+    an ownership map for C.  A and B nonzeros are distributed by their own
+    maps (default round-robin, matching the omitted-V^nz convention), and
+    the cut A-nets / B-nets lower to two expand routes.  Per-device pair
+    lists drive the BSR kernel over local slot tables laid out as
+    ``[owned (N_max) | received (p * T) | zero pad (1)]``.
+    """
+
+    @property
+    def c_part(self) -> np.ndarray:
+        return self.ownership["c_nz"]
+
+    @property
+    def a_part(self) -> np.ndarray:
+        return self.ownership["a_nz"]
+
+    @property
+    def b_part(self) -> np.ndarray:
+        return self.ownership["b_nz"]
+
+    # slot-table layout constants the executor mirrors
+    @property
+    def a_table_slots(self) -> int:
+        return self.local_ids["a_nz"].shape[1] + self.p * self.routes["expand_a"].T + 1
+
+    @property
+    def b_table_slots(self) -> int:
+        return self.local_ids["b_nz"].shape[1] + self.p * self.routes["expand_b"].T + 1
+
+    @property
+    def n_c_slots(self) -> int:
+        """Local C slots incl. the trailing garbage slot padding pairs hit."""
+        return self.local_ids["c_nz"].shape[1] + 1
+
+
+def _table_slots(
+    part: np.ndarray,
+    local_of: np.ndarray,
+    route: Route,
+    n_items: int,
+    p: int,
+) -> np.ndarray:
+    """(p, n_items) map: global item id -> per-device slot in the
+    ``[owned | received | zero]`` table; -1 where the device never sees it."""
+    n_owned = 0 if n_items == 0 else int(local_of.max(initial=-1)) + 1
+    # owned slots span [0, N_max); N_max from the padded list width
+    slots = np.full((p, n_items), -1, dtype=np.int64)
+    slots[part, np.arange(n_items, dtype=np.int64)] = local_of
+    T = route.T
+    s_ids, d_ids, t_ids = np.nonzero(route.recv_key >= 0)
+    keys = route.recv_key[s_ids, d_ids, t_ids]
+    slots[d_ids, keys] = n_owned + s_ids * T + t_ids
+    return slots
+
+
+def build_monoC_plan(
+    inst: SpGEMMInstance,
+    c_part: np.ndarray,
+    p: int,
+    a_part: np.ndarray | None = None,
+    b_part: np.ndarray | None = None,
+    word_size: int = 1,
+) -> MonoCPlan:
+    """Lower a monoC partition to routes + per-device BSR pair lists.
+
+    ``inst`` may be a scalar instance or the block structure of a tiled one
+    (tiling is a vertex coarsening — the plan is the same object either
+    way); ``word_size`` records the payload words per shipped nonzero
+    (b*b for b x b blocks) for volume accounting.
+    """
+    nA, nB, nC = inst.a.nnz, inst.b.nnz, inst.c.nnz
+    c_part = np.asarray(c_part, dtype=np.int64)
+    if a_part is None:
+        a_part = np.arange(nA, dtype=np.int64) % p
+    else:
+        a_part = np.asarray(a_part, dtype=np.int64)
+    if b_part is None:
+        b_part = np.arange(nB, dtype=np.int64) % p
+    else:
+        b_part = np.asarray(b_part, dtype=np.int64)
+
+    a_pos, b_pos, c_pos = inst.mult_a_pos, inst.mult_b_pos, inst.mult_c_pos
+    mult_dev = c_part[c_pos]
+
+    # expand routes: A nonzero ik is needed on every part owning a pin of
+    # net n^A_ik (a multiplication it feeds); same for B — Ex. 5.4's nets
+    local_a, local_of_a = padded_id_lists(a_part, p)
+    src, dst, items = _expand_transfers(a_pos, mult_dev, a_part, p)
+    route_a = build_route(src, dst, items, local_of_a, p, "A", word_size)
+    local_b, local_of_b = padded_id_lists(b_part, p)
+    src, dst, items = _expand_transfers(b_pos, mult_dev, b_part, p)
+    route_b = build_route(src, dst, items, local_of_b, p, "B", word_size)
+    local_c, local_of_c = padded_id_lists(c_part, p)
+
+    # per-device pair lists in table slots (vectorized: one lexsort)
+    a_slots = _table_slots(a_part, local_of_a, route_a, nA, p)
+    b_slots = _table_slots(b_part, local_of_b, route_b, nB, p)
+    pa = a_slots[mult_dev, a_pos]
+    pb = b_slots[mult_dev, b_pos]
+    pc = local_of_c[c_pos]
+    assert (pa >= 0).all() and (pb >= 0).all(), "routing missed a needed nonzero"
+    # group by device, then C slot ascending (kernel accumulates runs), then
+    # operand slots for determinism
+    order = np.lexsort((pb, pa, pc, mult_dev))
+    pa, pb, pc, dev = pa[order], pb[order], pc[order], mult_dev[order]
+    counts = np.bincount(dev, minlength=p)
+    P_max = max(int(counts.max(initial=0)), 1)
+    starts = np.cumsum(counts) - counts
+    rank = np.arange(len(dev), dtype=np.int64) - np.repeat(starts, counts)
+    # padding pairs hit the all-zero operand slots and the garbage C slot
+    A_max, B_max, C_max = local_a.shape[1], local_b.shape[1], local_c.shape[1]
+    pair_a = np.full((p, P_max), A_max + p * route_a.T, dtype=np.int64)
+    pair_b = np.full((p, P_max), B_max + p * route_b.T, dtype=np.int64)
+    pair_c = np.full((p, P_max), C_max, dtype=np.int64)
+    pair_a[dev, rank] = pa
+    pair_b[dev, rank] = pb
+    pair_c[dev, rank] = pc
+
+    return MonoCPlan(
+        model="monoC",
+        p=p,
+        ownership={"c_nz": c_part, "a_nz": a_part, "b_nz": b_part},
+        local_ids={"c_nz": local_c, "a_nz": local_a, "b_nz": local_b},
+        routes={"expand_a": route_a, "expand_b": route_b},
+        compute={"pair_a": pair_a, "pair_b": pair_b, "pair_c": pair_c},
+        stats={"n_pairs": int(len(dev)), "pairs_padded": int(p * P_max)},
+    )
+
+
+def plan_monoC_from_dense(
+    a_dense: np.ndarray,
+    b_dense: np.ndarray,
+    block: int,
+    p: int,
+    eps: float = 0.10,
+    seed: int = 0,
+) -> tuple[MonoCPlan, SpGEMMInstance]:
+    """Tile, model, partition, plan — the full monoC inspector pipeline.
+
+    Tiling into b x b blocks is a vertex coarsening of the fine-grained
+    hypergraph (DESIGN.md), so the monoC model of the *block* instance is
+    partitioned and the resulting plan drives the BSR executor directly.
+    Returns (plan, block instance) — the instance is also what
+    ``unpack_monoC_result`` needs (``inst.c`` and the padded shapes).
+    """
+    from repro.core.partition import partition
+    from repro.core.spgemm_models import build_model
+    from repro.sparse.bsr import to_bsr
+
+    ab = to_bsr(np.asarray(a_dense), block, block)
+    bb = to_bsr(np.asarray(b_dense), block, block)
+    inst = SpGEMMInstance(ab.block_structure(), bb.block_structure(), name="monoC")
+    hg = build_model(inst, "monoC")
+    res = partition(hg, p, eps=eps, seed=seed)
+    plan = build_monoC_plan(inst, res.parts, p, word_size=block * block)
+    return plan, inst

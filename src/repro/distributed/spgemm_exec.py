@@ -7,9 +7,18 @@ These realize the paper's algorithm classes as compiled JAX programs:
   of the partition (plus padding), per ``RowwisePlan``.
 - ``outer_product_spgemm``: 1D outer-product (Ex. 5.2) — local rank-|K_d|
   products and a fold phase realized as ``psum_scatter`` over C row blocks.
+- ``monoC_spgemm``: 2D sparsity-dependent monochrome-C (Ex. 5.4) — every
+  C (block-)nonzero lives on one device; the cut A-nets and B-nets lower to
+  two padded ``all_to_all`` expand phases on a 2D mesh, and local compute
+  streams the plan's pair lists through the BSR Pallas kernel
+  (``bsr_spgemm_local``, interpret-mode fallback on CPU) so the executor's
+  arithmetic is exactly the coarsened multiplication vertices the model
+  counts.
 - ``spsumma``: the sparsity-independent 2D baseline (Buluç–Gilbert SpSUMMA):
   stationary-C with A broadcast along mesh rows and B along mesh columns.
 
+Every sparsity-dependent executor consumes an ``ExecutionPlan``
+(``plan_ir``): ownership maps + padded routing tables + local work lists.
 Matrix values are dense arrays at validation scale (structure handling is
 host-side; local compute at production scale goes through the BSR Pallas
 kernels in ``repro.kernels``).  Correctness oracle: plain ``A @ B``.
@@ -22,15 +31,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 
-from repro.distributed.plan import OuterPlan, RowwisePlan
+from repro.distributed.plan_ir import MonoCPlan, OuterPlan, RowwisePlan
 
 
 def _take0(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
-    """Gather rows with -1 padding -> zero rows."""
+    """Gather leading-axis slices with -1 padding -> zero slices."""
     safe = jnp.maximum(idx, 0)
     rows = x[safe]
-    return jnp.where((idx >= 0)[:, None], rows, 0)
+    mask = (idx >= 0).reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.where(mask, rows, 0)
 
 
 def rowwise_spgemm(
@@ -92,12 +103,11 @@ def rowwise_spgemm(
         # local compute: my C rows
         return (a_blk @ table)[None]
 
-    shard = jax.shard_map(
+    shard = shard_map(
         step,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(), P(axis)),
         out_specs=P(axis),
-        check_vma=False,
     )
     c_local = shard(
         jnp.asarray(a_local),
@@ -155,12 +165,11 @@ def outer_product_spgemm(
         )
         return mine[None]
 
-    shard = jax.shard_map(
+    shard = shard_map(
         step,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=P(axis),
-        check_vma=False,
     )
     return shard(jnp.asarray(a_cols), jnp.asarray(b_rows))  # (p, I_pad//p, J)
 
@@ -194,12 +203,117 @@ def spsumma(
         b_col = jax.lax.all_gather(b_blk, ax_r, axis=0, tiled=True)  # (K_p, J/pc)
         return a_row @ b_col
 
-    shard = jax.shard_map(
+    shard = shard_map(
         step,
         mesh=mesh,
         in_specs=(P(ax_r, ax_c), P(ax_r, ax_c)),
         out_specs=P(ax_r, ax_c),
-        check_vma=False,
     )
     out = shard(jnp.asarray(a_pad), jnp.asarray(b_pad))
     return out[:I, :J]
+
+
+def monoC_spgemm(
+    a_dense: np.ndarray,
+    b_dense: np.ndarray,
+    plan: MonoCPlan,
+    mesh: Mesh,
+    axes: tuple[str, str] = ("x", "y"),
+    block: int = 8,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """2D sparsity-dependent monochrome-C SpGEMM (Ex. 5.4).
+
+    ``plan`` must have been built on the b x b block structures of the
+    operands (``plan_ir.plan_monoC_from_dense`` does both steps): C block
+    (i, j) lives on one device; two padded ``all_to_all`` phases over the
+    flattened 2D mesh ship exactly the cut A-nets and B-nets, after which
+    each device streams its pair list through the BSR kernel path
+    (``bsr_spgemm_local`` — Pallas on TPU, interpret-mode fallback on CPU,
+    optional XLA dense fallback) over slot tables laid out as
+    ``[owned | received | zero]``.
+
+    Returns device-major C block shards (p, C_max + 1, b, b); the trailing
+    slot per device is the padding sink.  Use ``unpack_monoC_result``.
+    """
+    from repro.kernels.bsr_spgemm import bsr_spgemm_local
+    from repro.sparse.bsr import to_bsr
+
+    p = plan.p
+    if mesh.devices.size != p:
+        raise ValueError(f"plan is for p={p} but mesh has {mesh.devices.size} devices")
+    ab = to_bsr(a_dense, block, block)
+    bb = to_bsr(b_dense, block, block)
+    if len(plan.a_part) != ab.n_blocks or len(plan.b_part) != bb.n_blocks:
+        raise ValueError("plan was built for a different block structure")
+    route_a, route_b = plan.routes["expand_a"], plan.routes["expand_b"]
+    T_a, T_b = route_a.T, route_b.T
+    n_c_slots = plan.n_c_slots
+
+    def pack(blocks, local_ids):
+        out = np.zeros((p, local_ids.shape[1], block, block), blocks.dtype)
+        dev, slot = np.nonzero(local_ids >= 0)
+        out[dev, slot] = blocks[local_ids[dev, slot]]
+        return out
+
+    a_own = pack(ab.blocks, plan.local_ids["a_nz"])
+    b_own = pack(bb.blocks, plan.local_ids["b_nz"])
+
+    def expand(own, send_idx_blk, T):
+        # own: (N_max, b, b); send_idx_blk: (p, T) local slots to ship
+        buf = _take0(own, send_idx_blk.reshape(-1)).reshape(p, T, block, block)
+        # THE cut-net traffic of this operand: one all_to_all over the
+        # flattened 2D mesh
+        recv = jax.lax.all_to_all(
+            buf[None], axes, split_axis=1, concat_axis=1, tiled=False
+        )[0]
+        zero = jnp.zeros((1, block, block), own.dtype)
+        return jnp.concatenate([own, recv.reshape(p * T, block, block), zero], 0)
+
+    def step(a_blk, b_blk, sa, sb, pa, pb, pc):
+        a_tab = expand(a_blk[0], sa[0], T_a)
+        b_tab = expand(b_blk[0], sb[0], T_b)
+        c = bsr_spgemm_local(
+            a_tab, b_tab, pa[0], pb[0], pc[0], n_c_blocks=n_c_slots, backend=backend
+        )
+        return c[None]
+
+    spec = P(axes)
+    shard = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(spec,) * 7,
+        out_specs=spec,
+    )
+    return shard(
+        jnp.asarray(a_own),
+        jnp.asarray(b_own),
+        jnp.asarray(route_a.send_idx),
+        jnp.asarray(route_b.send_idx),
+        jnp.asarray(plan.compute["pair_a"], jnp.int32),
+        jnp.asarray(plan.compute["pair_b"], jnp.int32),
+        jnp.asarray(plan.compute["pair_c"], jnp.int32),
+    )
+
+
+def unpack_monoC_result(
+    c_local: jnp.ndarray,
+    plan: MonoCPlan,
+    c_structure,
+    shape: tuple[int, int],
+) -> np.ndarray:
+    """Scatter device-major C block slots back to a dense array.
+
+    ``c_structure`` is the block-grid structure of C (``inst.c`` of the plan
+    instance); ``shape`` the padded dense shape (block-grid * block).
+    """
+    c_np = np.asarray(c_local)
+    b = c_np.shape[-1]
+    gr, gc = shape[0] // b, shape[1] // b
+    crow, ccol = c_structure.coo()
+    out = np.zeros((gr, gc, b, b), dtype=c_np.dtype)
+    local_c = plan.local_ids["c_nz"]
+    dev, slot = np.nonzero(local_c >= 0)
+    gids = local_c[dev, slot]
+    out[crow[gids], ccol[gids]] = c_np[dev, slot]
+    return out.transpose(0, 2, 1, 3).reshape(shape)

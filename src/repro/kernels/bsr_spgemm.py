@@ -15,12 +15,15 @@ VMEM per step: 3 * b^2 * 4B (fp32 acc) -> b=256 still only 768 KiB.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
 
 
 def _kernel(pa_ref, pb_ref, pc_ref, a_ref, b_ref, o_ref, *, acc_dtype):
@@ -70,7 +73,7 @@ def bsr_spgemm(
         ),
         out_shape=jax.ShapeDtypeStruct((n_c_blocks, bm, bn), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(dimension_semantics=("arbitrary",)),
     )(
         pair_a.astype(jnp.int32),
         pair_b.astype(jnp.int32),
@@ -89,7 +92,54 @@ def build_pair_lists(
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Host-side inspector: coarse multiplication vertices of the tiled
     SpGEMM.  Returns (pair_a, pair_b, pair_c, c_brows, c_bcols) with pair_c
-    sorted and C blocks deduplicated."""
+    sorted and C blocks deduplicated.
+
+    Vectorized (CSR-style index arithmetic: group B entries by block-row,
+    expand each A entry by its match count, one lexsort); byte-identical to
+    ``build_pair_lists_loop``, the original executable specification.
+    """
+    a_brows = np.asarray(a_brows, dtype=np.int64)
+    a_bcols = np.asarray(a_bcols, dtype=np.int64)
+    b_brows = np.asarray(b_brows, dtype=np.int64)
+    b_bcols = np.asarray(b_bcols, dtype=np.int64)
+    z = np.zeros(0, dtype=np.int64)
+    if len(a_brows) == 0 or len(b_brows) == 0:
+        return z, z, z, z, z
+    K = int(max(a_bcols.max(), b_brows.max())) + 1
+    # B entries grouped by inner block index k
+    b_order = np.argsort(b_brows, kind="stable")
+    b_cnt = np.bincount(b_brows, minlength=K)
+    b_start = np.cumsum(b_cnt) - b_cnt
+    # each A entry i matches the b_cnt[a_bcols[i]] B entries of its k-group
+    rep = b_cnt[a_bcols]
+    total = int(rep.sum())
+    if total == 0:
+        return z, z, z, z, z
+    ai = np.repeat(np.arange(len(a_brows), dtype=np.int64), rep)
+    off = np.arange(total, dtype=np.int64) - np.repeat(np.cumsum(rep) - rep, rep)
+    bj = b_order[b_start[a_bcols[ai]] + off]
+    r, c = a_brows[ai], b_bcols[bj]
+    order = np.lexsort((bj, ai, c, r))  # the loop version's (r, c, i, j) sort
+    pair_a, pair_b, r, c = ai[order], bj[order], r[order], c[order]
+    GC = int(b_bcols.max()) + 1
+    uniq, pair_c = np.unique(r * GC + c, return_inverse=True)
+    return (
+        pair_a,
+        pair_b,
+        pair_c.astype(np.int64),
+        uniq // GC,
+        uniq % GC,
+    )
+
+
+def build_pair_lists_loop(
+    a_brows: np.ndarray,
+    a_bcols: np.ndarray,
+    b_brows: np.ndarray,
+    b_bcols: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Original pure-Python inspector, kept as the executable specification
+    of ``build_pair_lists`` (invariant-tested to match byte for byte)."""
     pairs = []
     by_k: dict[int, list[int]] = {}
     for j, k in enumerate(b_brows):
@@ -109,3 +159,49 @@ def build_pair_lists(
     c_brows = np.array([rc[0] for rc in c_coords], dtype=np.int64)
     c_bcols = np.array([rc[1] for rc in c_coords], dtype=np.int64)
     return pair_a, pair_b, pair_c, c_brows, c_bcols
+
+
+def _default_backend() -> str:
+    env = os.environ.get("REPRO_SPGEMM_BACKEND")
+    if env:
+        return env
+    return (
+        "interpret"
+        if os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+        else "pallas"
+    )
+
+
+def bsr_spgemm_local(
+    a_blocks: jnp.ndarray,
+    b_blocks: jnp.ndarray,
+    pair_a: jnp.ndarray,
+    pair_b: jnp.ndarray,
+    pair_c: jnp.ndarray,
+    n_c_blocks: int,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Local-compute entry point the distributed executors route through.
+
+    ``backend``: 'pallas' (compiled Mosaic, TPU), 'interpret' (Pallas
+    interpreter — correct anywhere, the CPU fallback), or 'xla' (dense
+    gather/einsum/segment-add fallback, fastest without a TPU attached).
+    Default: $REPRO_SPGEMM_BACKEND, else interpret/pallas per
+    $REPRO_PALLAS_INTERPRET like the rest of ``repro.kernels``.
+    """
+    backend = backend or _default_backend()
+    if backend == "xla":
+        from repro.kernels.ref import bsr_spgemm_ref
+
+        return bsr_spgemm_ref(a_blocks, b_blocks, pair_a, pair_b, pair_c, n_c_blocks)
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(f"unknown SpGEMM backend {backend!r}")
+    return bsr_spgemm(
+        a_blocks,
+        b_blocks,
+        pair_a,
+        pair_b,
+        pair_c,
+        n_c_blocks=n_c_blocks,
+        interpret=backend == "interpret",
+    )

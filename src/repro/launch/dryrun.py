@@ -26,6 +26,8 @@ import traceback
 from functools import partial
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -203,7 +205,7 @@ def run_cell(
     try:
         import dataclasses as _dc
 
-        jax.set_mesh(mesh)  # ambient mesh: with_sharding_constraint sees it
+        compat.set_mesh(mesh)  # ambient mesh: with_sharding_constraint sees it
         donate_on = "donate" in opts
         # --- 1. full-depth compile (the deliverable): memory + success ---
         fn, args, in_sh, out_sh, don = build_cell(arch, shape, mesh, opts=opts)

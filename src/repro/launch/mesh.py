@@ -9,10 +9,11 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def _mk(shape, axes):
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -10,9 +10,12 @@ import dataclasses
 from functools import partial
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.models.sharding import constrain
 
 
@@ -234,7 +237,7 @@ def moe_layer(
         perm = jnp.asarray(np.asarray(moe.expert_placement))
         gate_idx = perm[gate_idx]
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     ep_ok = (
         mesh is not None
         and "model" in mesh.axis_names
@@ -300,12 +303,11 @@ def _moe_ep(xt, gate_idx, gate_vals, params, cfg, mesh):
         out = jax.lax.psum(out.astype(jnp.float32), "model")
         return out.astype(xt_loc.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(tok_spec, tok_spec, tok_spec, wi_spec, wi_spec, wo_spec),
         out_specs=tok_spec,
-        check_vma=False,
     )(xt, gate_idx, gate_vals, params["wi"], params["wg"], params["wo"])
 
 

@@ -2,28 +2,38 @@
 
 Run as:  python tests/multidev_runner.py <case>
 Sets XLA host-device-count BEFORE importing jax (must not leak into the main
-pytest process, which owns a 1-device jax).
+pytest process, which owns a 1-device jax).  ``REPRO_DEVICES`` overrides the
+device count (default 4; the monoC cases run at 4 and 8).
 """
 import os
 import sys
 
+N_DEV = int(os.environ.get("REPRO_DEVICES", "4"))
 os.environ["XLA_FLAGS"] = (
-    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    os.environ.get("XLA_FLAGS", "")
+    + f" --xla_force_host_platform_device_count={N_DEV}"
 )
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
+from repro import compat  # noqa: E402
+from repro.compat import shard_map  # noqa: E402
 from repro.core import SpGEMMInstance, build_model, partition  # noqa: E402
 from repro.distributed import (  # noqa: E402
     build_outer_plan,
     build_rowwise_plan,
+    monoC_spgemm,
     outer_product_spgemm,
     rowwise_spgemm,
     spsumma,
 )
-from repro.distributed.spgemm_exec import unpack_rowwise_result  # noqa: E402
+from repro.distributed.plan_ir import plan_monoC_from_dense  # noqa: E402
+from repro.distributed.spgemm_exec import (  # noqa: E402
+    unpack_monoC_result,
+    unpack_rowwise_result,
+)
 from repro.sparse.structure import random_structure  # noqa: E402
 
 
@@ -100,6 +110,78 @@ def case_rowwise_identity_partition():
     print("OK rowwise_identity")
 
 
+def _monoC_oracle(seed: int, shape: tuple[int, int, int], block: int, density: float):
+    """Build a monoC plan on the block structure, execute on a 2D mesh over
+    all devices, check vs dense A @ B, and check the IR's route accounting."""
+    p = N_DEV
+    rng = np.random.default_rng(seed)
+    I, K, J = shape
+    a_s = random_structure(I, K, density, rng)
+    b_s = random_structure(K, J, density, rng)
+    a = _random_valued(a_s, rng)
+    b = _random_valued(b_s, rng)
+    plan, inst = plan_monoC_from_dense(a, b, block, p, seed=seed)
+    pr = 2
+    pc = p // pr
+    mesh = Mesh(np.array(jax.devices()).reshape(pr, pc), ("x", "y"))
+    c_local = monoC_spgemm(a, b, plan, mesh, block=block)
+    gr, gc = inst.c.shape
+    c = unpack_monoC_result(c_local, plan, inst.c, (gr * block, gc * block))[:I, :J]
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+    assert plan.comm_words_padded >= plan.comm_words_ideal
+    for route in plan.routes.values():
+        assert route.items_padded >= route.items_ideal
+    return plan
+
+
+def case_monoC():
+    plan = _monoC_oracle(0, (36, 28, 32), block=4, density=0.18)
+    print(
+        "OK monoC p=%d ideal=%d padded=%d"
+        % (N_DEV, plan.comm_words_ideal, plan.comm_words_padded)
+    )
+
+
+def case_monoC_blocked():
+    plan = _monoC_oracle(1, (48, 40, 32), block=8, density=0.22)
+    print(
+        "OK monoC_blocked p=%d ideal=%d padded=%d"
+        % (N_DEV, plan.comm_words_ideal, plan.comm_words_padded)
+    )
+
+
+def case_monoC_identity_partition():
+    """All C blocks (and A/B nonzeros) on device 0: zero expand traffic."""
+    rng = np.random.default_rng(2)
+    a_s = random_structure(16, 12, 0.3, rng)
+    b_s = random_structure(12, 16, 0.3, rng)
+    a = _random_valued(a_s, rng)
+    b = _random_valued(b_s, rng)
+    from repro.distributed import build_monoC_plan
+    from repro.sparse.bsr import to_bsr
+
+    block = 4
+    ab = to_bsr(a, block, block)
+    bb = to_bsr(b, block, block)
+    inst = SpGEMMInstance(ab.block_structure(), bb.block_structure())
+    plan = build_monoC_plan(
+        inst,
+        np.zeros(inst.c.nnz, dtype=np.int64),
+        N_DEV,
+        a_part=np.zeros(inst.a.nnz, dtype=np.int64),
+        b_part=np.zeros(inst.b.nnz, dtype=np.int64),
+        word_size=block * block,
+    )
+    assert plan.comm_words_ideal == 0
+    pr = 2
+    mesh = Mesh(np.array(jax.devices()).reshape(pr, N_DEV // pr), ("x", "y"))
+    c_local = monoC_spgemm(a, b, plan, mesh, block=block)
+    gr, gc = inst.c.shape
+    c = unpack_monoC_result(c_local, plan, inst.c, (gr * block, gc * block))[:16, :16]
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+    print("OK monoC_identity")
+
+
 def case_compressed_psum():
     """EF-int8 compressed all-reduce: approximates the exact mean within the
     quantization scale, and error feedback drives the running average of the
@@ -117,12 +199,11 @@ def case_compressed_psum():
         return compressed_psum_mean(x[0], err[0], "x")
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x, e: tuple(o[None] for o in body(x, e)),
             mesh=mesh,
             in_specs=(P("x"), P("x")),
             out_specs=(P("x"), P("x")),
-            check_vma=False,
         )
     )
     err = np.zeros_like(xs)
@@ -172,11 +253,8 @@ def case_moe_ep():
     loss_ref, _ = jax.jit(lambda p, b: train_loss(p, cfg, b))(params, batch)
 
     # EP path: mesh with model axis 2 (4 experts / 2 columns), data axis 2
-    mesh = jax.make_mesh(
-        (2, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
-    jax.set_mesh(mesh)
+    mesh = compat.make_mesh((2, 2), ("data", "model"))
+    compat.set_mesh(mesh)
     try:
         from repro.models.sharding import param_shardings, batch_sharding
         psh = param_shardings(cfg, mesh)
@@ -192,7 +270,7 @@ def case_moe_ep():
 
 
 if __name__ == "__main__":
-    assert len(jax.devices()) == 4, jax.devices()
+    assert len(jax.devices()) == N_DEV, jax.devices()
     for name in sys.argv[1:] or [
         "rowwise",
         "outer",

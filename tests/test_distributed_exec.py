@@ -10,9 +10,10 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RUNNER = os.path.join(ROOT, "tests", "multidev_runner.py")
 
 
-def _run(case: str) -> str:
+def _run(case: str, devices: int = 4) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_DEVICES"] = str(devices)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
         [sys.executable, RUNNER, case],
@@ -30,6 +31,17 @@ def _run(case: str) -> str:
 )
 def test_distributed_spgemm(case):
     assert f"OK {case.split('_partition')[0]}" in _run(case)
+
+
+@pytest.mark.parametrize("devices", [4, 8])
+@pytest.mark.parametrize("case", ["monoC", "monoC_blocked"])
+def test_monoC_spgemm_matches_dense_oracle(case, devices):
+    """2 instances x p in {4, 8}: the 2D monochrome-C executor equals A @ B."""
+    assert f"OK {case} p={devices}" in _run(case, devices=devices)
+
+
+def test_monoC_identity_partition_has_zero_traffic():
+    assert "OK monoC_identity" in _run("monoC_identity_partition")
 
 
 def test_compressed_psum_error_feedback():

@@ -1,0 +1,65 @@
+"""Hypothesis property tests for the Pallas kernels (split from
+``test_kernels.py`` so its deterministic oracle tests still run in
+environments without hypothesis)."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; test_kernels.py covers the oracles"
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.sparse.bsr import to_bsr, bsr_to_dense, BlockSparse
+
+
+def _random_block_dense(rng, m, k, density, block):
+    """Dense matrix whose nonzero support is block-structured."""
+    gm, gk = m // block, k // block
+    mask = rng.random((gm, gk)) < density
+    if not mask.any():
+        mask[0, 0] = True
+    dense = rng.standard_normal((m, k)).astype(np.float32)
+    full = np.kron(mask, np.ones((block, block), bool))
+    return dense * full
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    gm=st.integers(2, 5),
+    gk=st.integers(2, 5),
+    n=st.sampled_from([8, 16]),
+    density=st.floats(0.2, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bsr_spmm_property(gm, gk, n, density, seed):
+    """Property: kernel == dense matmul for arbitrary block supports."""
+    block = 8
+    rng = np.random.default_rng(seed)
+    a = _random_block_dense(rng, gm * block, gk * block, density, block)
+    b = rng.standard_normal((gk * block, n)).astype(np.float32)
+    bsr = to_bsr(a, block, block)
+    got = np.asarray(ops.spmm(bsr, b, interpret=True))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    gm=st.integers(2, 4),
+    gk=st.integers(2, 4),
+    gn=st.integers(2, 4),
+    da=st.floats(0.25, 0.8),
+    db=st.floats(0.25, 0.8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bsr_spgemm_property(gm, gk, gn, da, db, seed):
+    block = 8
+    rng = np.random.default_rng(seed)
+    a = _random_block_dense(rng, gm * block, gk * block, da, block)
+    b = _random_block_dense(rng, gk * block, gn * block, db, block)
+    ab, bb = to_bsr(a, block, block), to_bsr(b, block, block)
+    c_blocks, crows, ccols = ops.spgemm(ab, bb, interpret=True)
+    c = bsr_to_dense(
+        BlockSparse(np.asarray(c_blocks), crows, ccols, (gm * block, gn * block))
+    )
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)

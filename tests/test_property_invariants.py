@@ -1,5 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; deterministic tests cover the rest"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SpGEMMInstance, build_model, evaluate, partition
