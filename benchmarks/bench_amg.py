@@ -6,6 +6,9 @@ our reduced sizes pair (n=9, p=8), (n=12, p=27), (n=15, p=64).
 Expected qualitative result (Sec. 6.1): row-wise nearly optimal for A@P;
 outer-product (and the 2D refinements monoA/monoB) nearly optimal for PTAP
 with ~an order of magnitude gap to row-wise/monoC.
+
+Paper scale adds the (18, 125) point (5832 fine rows/chip-count step kept
+~constant) — in reach since the flat-CSR partitioner landed.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ from repro.core.matrices import amg_instances, geometric_row_partition
 from repro.core.spgemm_models import MODELS
 
 WEAK = [(9, 8), (12, 27)]
-WEAK_FULL = [(9, 8), (12, 27), (15, 64)]
+WEAK_FULL = [(9, 8), (12, 27), (15, 64), (18, 125)]
 
 
 def run(out_dir=None, quick=False, flavor="model"):

@@ -8,17 +8,19 @@ from repro.core.matrices import amg_instances, lp_instance, mcl_instance
 def run(out_dir=None, quick=False):
     records = []
     insts = []
-    n = 9 if quick else 12
+    # paper scale raised (12 -> 15, LP/MCL scales ~doubled) with the
+    # flat-CSR partitioner; quick stays container-fast
+    n = 9 if quick else 15
     insts += list(amg_instances(n))
     if not quick:
         insts += list(amg_instances(9, flavor="sa_rho"))
-    insts += [lp_instance("fome21", scale=0.02 if quick else 0.05)]
-    insts += [mcl_instance("facebook", scale=0.06 if quick else 0.12)]
+    insts += [lp_instance("fome21", scale=0.02 if quick else 0.10)]
+    insts += [mcl_instance("facebook", scale=0.06 if quick else 0.25)]
     if not quick:
         insts += [
-            lp_instance("sgpf5y6", scale=0.05),
-            mcl_instance("dip", scale=0.5),
-            mcl_instance("roadnetca", scale=0.5),
+            lp_instance("sgpf5y6", scale=0.10),
+            mcl_instance("dip", scale=0.75),
+            mcl_instance("roadnetca", scale=0.75),
         ]
     for inst in insts:
         s = inst.stats()

@@ -92,10 +92,33 @@ def perf_rows(dryrun_dir: str) -> str:
     return head + "\n" + "\n".join(rows)
 
 
+def partition_table(paper_dir: str) -> str:
+    """Flat-CSR engine vs loop reference (benchmarks/bench_partition.py)."""
+    path = os.path.join(paper_dir, "partition.json")
+    if not os.path.exists(path):
+        return "(no partition.json — run `python benchmarks/bench_partition.py --full --out experiments/paper`)"
+    rows = []
+    for rec in json.load(open(path)):
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['name']} | skip | {rec.get('reason','')} | | | |")
+            continue
+        rows.append(
+            f"| {rec['name']} | {rec['us_per_call']/1e6:.3f} s | "
+            f"{rec['connectivity']} | {rec['comp_imbalance']:.3f} | "
+            f"{rec['speedup_vs_loop']}x | {rec['conn_vs_loop']} |"
+        )
+    head = (
+        "| cell | partition s | connectivity | imbalance | flat speedup | conn vs loop |\n"
+        "|---|---|---|---|---|---|"
+    )
+    return head + "\n" + "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--baseline-dir", default="experiments/baseline")
+    ap.add_argument("--paper-dir", default="experiments/paper")
     ap.add_argument("--section", default="all")
     args = ap.parse_args()
     if args.section in ("all", "dryrun"):
@@ -107,6 +130,9 @@ def main():
     if args.section in ("all", "perf"):
         print("\n<!-- perf (opt-tagged) cells -->")
         print(perf_rows(args.dryrun_dir))
+    if args.section in ("all", "partition"):
+        print("\n<!-- partitioner engine table -->")
+        print(partition_table(args.paper_dir))
 
 
 if __name__ == "__main__":

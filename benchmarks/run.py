@@ -1,8 +1,10 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs the paper-scale
-sweeps (tens of minutes of partitioning); the default grid finishes in a few
-minutes and exercises every harness.
+Prints ``name,us_per_call,derived`` CSV.  ``--scale small`` (the default)
+finishes in a few minutes and exercises every harness; ``--scale paper``
+runs the paper-scale sweeps (tens of minutes of partitioning — the flat-CSR
+refinement engine makes these feasible in-container).  ``--full`` is kept as
+an alias for ``--scale paper``.
 """
 from __future__ import annotations
 
@@ -10,7 +12,7 @@ import argparse
 import sys
 
 from benchmarks import bench_amg, bench_bounds, bench_kernels, bench_lp, bench_mcl, bench_tab2
-from benchmarks import bench_plan_build, roofline
+from benchmarks import bench_partition, bench_plan_build, roofline
 from benchmarks.common import csv_lines
 
 SUITES = {
@@ -21,16 +23,27 @@ SUITES = {
     "bounds": bench_bounds.run,
     "kernels": bench_kernels.run,
     "plan": bench_plan_build.run,
+    "partition": bench_partition.run,
     "roofline": roofline.run,
 }
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument(
+        "--scale",
+        default=None,
+        choices=("small", "paper"),
+        help="instance sizes: 'small' keeps the container default fast, "
+        "'paper' runs the paper-scale sweep",
+    )
+    ap.add_argument(
+        "--full", action="store_true", help="alias for --scale paper (kept for CI)"
+    )
     ap.add_argument("--only", default=None, choices=list(SUITES))
     ap.add_argument("--out", default="experiments/paper")
     args = ap.parse_args(argv)
+    scale = args.scale or ("paper" if args.full else "small")
 
     print("name,us_per_call,derived")
     failures = 0
@@ -41,7 +54,7 @@ def main(argv=None) -> None:
             if name == "roofline":
                 records = fn(out_dir="experiments")
             else:
-                records = fn(out_dir=args.out, quick=not args.full)
+                records = fn(out_dir=args.out, quick=scale == "small")
         except Exception as e:  # a suite failing should not hide the others
             print(f"{name},-1,ERROR:{type(e).__name__}:{e}")
             failures += 1

@@ -27,6 +27,7 @@ class Hypergraph:
 
     _vtx_ptr: np.ndarray | None = dataclasses.field(default=None, repr=False)
     _vtx_nets: np.ndarray | None = dataclasses.field(default=None, repr=False)
+    _pin_nets: np.ndarray | None = dataclasses.field(default=None, repr=False)
     _inc: "sp.csr_matrix | None" = dataclasses.field(default=None, repr=False)
 
     # -- properties --------------------------------------------------------
@@ -55,12 +56,27 @@ class Hypergraph:
             )
         return self._inc
 
+    def pin_nets(self) -> np.ndarray:
+        """(n_pins,) net id of each pin entry — the expansion
+        ``repeat(arange(n_nets), net_sizes())``, cached because every
+        vectorized sweep over the pin list starts from it."""
+        if self._pin_nets is None:
+            self._pin_nets = np.repeat(
+                np.arange(self.n_nets, dtype=np.int64), self.net_sizes()
+            )
+        return self._pin_nets
+
     def vertex_to_nets(self) -> tuple[np.ndarray, np.ndarray]:
-        """CSR of nets incident to each vertex (built lazily, cached)."""
+        """CSR of nets incident to each vertex (built lazily, cached).
+        Pure index arithmetic: one stable argsort of the pin list by vertex
+        plus a bincount — no scipy transpose."""
         if self._vtx_ptr is None:
-            inc = self.incidence().tocsc()
-            self._vtx_ptr = inc.indptr.astype(np.int64)
-            self._vtx_nets = inc.indices.astype(np.int64)
+            order = np.argsort(self.net_pins, kind="stable")
+            self._vtx_nets = self.pin_nets()[order]
+            counts = np.bincount(self.net_pins, minlength=self.n_vertices)
+            self._vtx_ptr = np.concatenate(
+                [[0], np.cumsum(counts)]
+            ).astype(np.int64)
         return self._vtx_ptr, self._vtx_nets
 
     def nets_of(self, vertex: int) -> np.ndarray:

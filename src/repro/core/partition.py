@@ -1,21 +1,36 @@
 """Multilevel K-way hypergraph partitioner.
 
 PaToH stand-in: recursive bisection with
-  (1) heavy-connectivity vertex matching for coarsening (vectorized through a
-      scipy sparse similarity product),
+  (1) heavy-connectivity vertex clustering for coarsening (vectorized
+      through a scipy sparse similarity product),
   (2) greedy BFS-style initial bisection under a compute-balance constraint,
   (3) boundary FM refinement with classic delta-gain updates, minimizing the
       connectivity metric sum_n c(n) * (lambda(n) - 1) (what PaToH minimizes,
       Sec. 6; for a bisection this equals the weighted cut),
+  (4) a direct K-way boundary label-propagation pass after recursive
+      bisection that recovers cut lost at bisection boundaries,
 subject to w_comp(V_i) <= (1 + eps) * W / p (Def. 4.4 with delta = p - 1,
 matching the paper's experiments).
 
+Two engines share this driver (DESIGN.md §6):
+
+- ``engine="flat"`` (default): the flat-CSR refinement engine in
+  ``core/refine.py`` — gain-bucket FM, vectorized frontier growth, star
+  clustering with a vectorized similarity argmax, plus the K-way pass.
+- ``engine="loop"``: the original per-move implementation, retained as the
+  executable specification (``_fm_refine_loop`` / ``_initial_bisect_loop`` /
+  ``_match_vertices_loop``, matching the ``build_rowwise_plan_loop``
+  convention).  ``benchmarks/bench_partition.py`` measures the speedup and
+  ``tests/test_partition_invariants.py`` gates the flat engine on
+  equal-or-better connectivity at equal balance feasibility.
+
 Engineering notes (documented, standard heuristics):
-- nets larger than ``BIG_NET`` pins are ignored during matching and their
+- nets larger than ``BIG_NET`` pins are ignored during clustering and their
   delta-gain propagation is skipped (their contribution to gains is still
   counted when a vertex's gain is first computed); at the sizes we run,
   such nets are almost never uncuttable anyway.
-- FM candidate set = vertices on cut nets, capped per pass.
+- FM candidate set = vertices on cut nets (capped per pass in the loop
+  engine).
 """
 from __future__ import annotations
 
@@ -26,10 +41,18 @@ import numpy as np
 import scipy.sparse as sp
 
 from repro.core.hypergraph import Hypergraph, build_hypergraph_flat
+from repro.core.refine import (
+    BIG_NET,
+    DEG_CAP,
+    fm_refine,
+    initial_bisect,
+    kway_refine,
+)
 
-BIG_NET = 96  # pins; nets above this are skipped in matching/gain updates
-MAX_MOVES_PER_PASS = 1200
-DEG_CAP = 2500  # vertices in more nets than this are not FM move candidates
+MAX_MOVES_PER_PASS = 1200  # loop-engine FM candidate cap
+SMALL_DIRECT = 4096  # below this, the flat engine runs full per-bisection
+# multilevel (quality path); above it, one shared V-cycle (speed path)
+SMALL_STARTS = 4  # independent starts on the quality path (best kept)
 
 
 @dataclasses.dataclass
@@ -42,25 +65,99 @@ class PartitionResult:
 # ---------------------------------------------------------------------------
 # coarsening
 # ---------------------------------------------------------------------------
-def _match_vertices(
-    hg: Hypergraph, rng: np.random.Generator, max_weight: float
-) -> np.ndarray:
-    """Heavy-connectivity matching via a sparse similarity product:
-    sim(u, v) = sum over shared (small) nets of c(n)/(|n| - 1).  Each vertex
-    proposes its best partner (row argmax); proposals are granted greedily in
-    descending-score order."""
+def _similarity(hg: Hypergraph, dtype=np.float64) -> sp.spmatrix:
+    """sim(u, v) = sum over shared (small) nets of c(n)/(|n| - 1), with the
+    diagonal kept (callers mask it entry-wise).  The result is symmetric, so
+    callers may read its compressed-axis structure as rows whether scipy
+    hands back CSR or CSC."""
     sizes = hg.net_sizes()
     ok = (sizes > 1) & (sizes <= BIG_NET)
-    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), sizes)
+    net_ids = hg.pin_nets()
     keep = ok[net_ids]
     rows, cols = net_ids[keep], hg.net_pins[keep]
-    w = np.sqrt(hg.net_cost[rows].astype(np.float64) / np.maximum(sizes[rows] - 1, 1))
+    w = np.sqrt(
+        hg.net_cost[rows].astype(dtype) / np.maximum(sizes[rows] - 1, 1).astype(dtype)
+    )
     W = sp.coo_matrix((w, (rows, cols)), shape=(hg.n_nets, hg.n_vertices)).tocsr()
+    S = W.T @ W
+    if S.format not in ("csr", "csc"):
+        S = S.tocsr()
+    return S
+
+
+def _best_partners(S: sp.spmatrix) -> tuple[np.ndarray, np.ndarray]:
+    """Row-wise (argmax, max) of a symmetric similarity matrix excluding the
+    diagonal, fully vectorized via one segmented ``maximum.reduceat`` — the
+    diagonal is masked entry-wise, which sidesteps the scipy-1.14 ``setdiag``
+    corruption the old per-row loop worked around with a COO rebuild.  ``S``
+    may be CSR or CSC; symmetry makes the compressed axis a row either way."""
+    n = S.shape[0]
+    best = np.full(n, -1, dtype=np.int64)
+    score = np.full(n, -1.0)
+    lens = np.diff(S.indptr)
+    nzr = np.flatnonzero(lens)
+    if len(nzr) == 0:
+        return best, score
+    rows_rep = np.repeat(np.arange(n, dtype=np.int64), lens)
+    data = np.where(S.indices == rows_rep, -1.0, S.data)
+    rowmax = np.maximum.reduceat(data, S.indptr[nzr])
+    hit = np.flatnonzero(data == np.repeat(rowmax, lens[nzr]))
+    urow, first = np.unique(rows_rep[hit], return_index=True)
+    best[urow] = S.indices[hit[first]]
+    score[urow] = data[hit[first]]
+    return best, score
+
+
+def _cluster_vertices(
+    hg: Hypergraph, max_weight: float, stars: bool = True
+) -> np.ndarray:
+    """Agglomerative clustering: each vertex proposes its best partner
+    (vectorized row argmax of the similarity product); proposals are granted
+    in descending-score order.  With ``stars=True`` later vertices may join
+    an existing cluster while its weight stays under ``max_weight`` —
+    multi-vertex clusters shrink the hypergraph ~3x per level, so the
+    V-cycle is shorter.  With ``stars=False`` only pairs form (the quality
+    path keeps more levels, like the loop reference's pairwise matching)."""
+    n = hg.n_vertices
+    best, score = _best_partners(_similarity(hg, dtype=np.float32))
+    order = np.argsort(-score, kind="stable")
+    cl = np.full(n, -1, dtype=np.int64)
+    cl_w: list[float] = []
+    wc = hg.w_comp.astype(np.float64)
+    best_l = best.tolist()
+    score_l = score.tolist()
+    cl_l = cl.tolist()  # python list: the grant loop is scalar
+    for v in order.tolist():
+        if score_l[v] <= 0:
+            break
+        if cl_l[v] >= 0:
+            continue
+        u = best_l[v]
+        cu = cl_l[u]
+        if cu < 0:
+            if wc[u] + wc[v] <= max_weight:
+                cl_l[v] = cl_l[u] = len(cl_w)
+                cl_w.append(wc[u] + wc[v])
+        elif stars and cl_w[cu] + wc[v] <= max_weight:
+            cl_l[v] = cu
+            cl_w[cu] += wc[v]
+    cl = np.array(cl_l, dtype=np.int64)
+    singles = np.flatnonzero(cl < 0)
+    cl[singles] = len(cl_w) + np.arange(len(singles))
+    return cl
+
+
+def _match_vertices_loop(
+    hg: Hypergraph, rng: np.random.Generator, max_weight: float
+) -> np.ndarray:
+    """Loop-engine matcher (executable specification): pairwise
+    heavy-connectivity matching with a per-row argmax loop; proposals are
+    granted greedily in descending-score order."""
+    S = _similarity(hg).tocoo()
     # drop the diagonal via an explicit COO filter: csr.setdiag(0) in scipy
     # 1.14 corrupts neighbouring entries when nearly the whole diagonal is
     # stored (stale offsets after _insert_many), leaving self-similarities
     # that make vertices match themselves
-    S = (W.T @ W).tocoo()
     off_diag = S.row != S.col
     S = sp.csr_matrix(
         (S.data[off_diag], (S.row[off_diag], S.col[off_diag])), shape=S.shape
@@ -85,21 +182,26 @@ def _match_vertices(
         if match[v] < 0 and match[u] < 0 and wc[u] + wc[v] <= max_weight:
             match[v] = u
             match[u] = v
-    unmatched = match < 0
     coarse = np.full(n, -1, dtype=np.int64)
     # matched pairs get one id, singletons keep their own
-    pair_lo = np.flatnonzero((match > np.arange(n)))
-    k = 0
+    pair_lo = np.flatnonzero(match > np.arange(n))
     coarse[pair_lo] = np.arange(len(pair_lo))
     coarse[match[pair_lo]] = coarse[pair_lo]
-    k = len(pair_lo)
-    singles = np.flatnonzero(unmatched)
-    coarse[singles] = k + np.arange(len(singles))
+    singles = np.flatnonzero(match < 0)
+    coarse[singles] = len(pair_lo) + np.arange(len(singles))
     return coarse
 
 
-def _coarsen(hg: Hypergraph, coarse: np.ndarray) -> tuple[Hypergraph, int]:
+def _coarsen(
+    hg: Hypergraph, coarse: np.ndarray, big_net_cap: int | None = None
+) -> tuple[Hypergraph, int]:
     """Contract vertices by ``coarse``; drop singletons (Sec. 5.1).
+
+    ``big_net_cap``: additionally drop coarse nets with more pins than the
+    cap (the flat engine passes ``BIG_NET``).  Contracted nets grow toward
+    |V| pins, are excluded from similarity clustering and FM gain updates
+    anyway, and are next to uncuttable — but still dominate the coarse
+    graphs' pin counts if kept.  The loop reference keeps every net.
 
     Identical nets are NOT coalesced inside the V-cycle: duplicate nets yield
     exactly the same connectivity objective and FM gains (their costs add),
@@ -110,13 +212,15 @@ def _coarsen(hg: Hypergraph, coarse: np.ndarray) -> tuple[Hypergraph, int]:
     w_comp = np.bincount(coarse, weights=hg.w_comp, minlength=n_coarse).astype(np.int64)
     w_mem = np.bincount(coarse, weights=hg.w_mem, minlength=n_coarse).astype(np.int64)
 
-    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), hg.net_sizes())
+    net_ids = hg.pin_nets()
     pins = coarse[hg.net_pins]
     key = np.unique(net_ids * n_coarse + pins)
     net_ids, pins = key // n_coarse, key % n_coarse
 
     counts = np.bincount(net_ids, minlength=hg.n_nets)
-    keep = counts[net_ids] > 1
+    keep = (counts[net_ids] > 1) if big_net_cap is None else (
+        (counts[net_ids] > 1) & (counts[net_ids] <= big_net_cap)
+    )
     net_ids, pins = net_ids[keep], pins[keep]
     if len(net_ids) == 0:
         empty = np.empty(0, dtype=np.int64)
@@ -140,9 +244,9 @@ def _coarsen(hg: Hypergraph, coarse: np.ndarray) -> tuple[Hypergraph, int]:
 
 
 # ---------------------------------------------------------------------------
-# initial bisection + FM refinement
+# loop-engine initial bisection + FM refinement (executable specification)
 # ---------------------------------------------------------------------------
-def _initial_bisect(
+def _initial_bisect_loop(
     hg: Hypergraph, target0: float, rng: np.random.Generator
 ) -> np.ndarray:
     """Greedy net-BFS growth of side 0 up to ~target0 total compute weight."""
@@ -156,7 +260,6 @@ def _initial_bisect(
     frontier: deque[int] = deque([seed])
     seen = np.zeros(n, dtype=bool)
     seen[seed] = True
-    n_seen = 1
     while total0 < target0:
         if not frontier:
             rest = np.flatnonzero(~seen)
@@ -164,7 +267,6 @@ def _initial_bisect(
                 break
             s = int(rest[rng.integers(len(rest))])
             seen[s] = True
-            n_seen += 1
             frontier.append(s)
         v = frontier.popleft()
         if total0 + w[v] > target0 * 1.05 and total0 > 0:
@@ -176,14 +278,13 @@ def _initial_bisect(
             for u in pins:
                 if not seen[u]:
                     seen[u] = True
-                    n_seen += 1
                     frontier.append(u)
     return side
 
 
 def _compute_counts(hg: Hypergraph, side: np.ndarray) -> np.ndarray:
     """(n_nets, 2) per-side pin counts."""
-    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), hg.net_sizes())
+    net_ids = hg.pin_nets()
     pin_side = side[hg.net_pins]
     cnt = np.zeros((hg.n_nets, 2), dtype=np.int64)
     cnt[:, 1] = np.bincount(net_ids, weights=pin_side, minlength=hg.n_nets)
@@ -210,15 +311,17 @@ def _gains_for_all(hg: Hypergraph, side: np.ndarray, cnt: np.ndarray) -> np.ndar
     return gains
 
 
-def _fm_refine(
+def _fm_refine_loop(
     hg: Hypergraph,
     side: np.ndarray,
     max_w: tuple[float, float],
     passes: int = 2,
-    rng: np.random.Generator | None = None,
 ) -> np.ndarray:
-    """Boundary FM with classic delta-gain updates and per-pass rollback."""
-    rng = rng or np.random.default_rng(0)
+    """Boundary FM with classic delta-gain updates and per-pass rollback.
+
+    Retained as the executable specification of ``refine.fm_refine`` —
+    per-move ``np.argmax`` best-move selection and per-net pin gathers;
+    ``benchmarks/bench_partition.py`` measures the flat engine against it."""
     ptr, vnets = hg.vertex_to_nets()
     net_ptr, net_pins = hg.net_ptr, hg.net_pins
     cost = hg.net_cost.astype(np.float64)
@@ -326,6 +429,9 @@ def _fm_refine(
     return side
 
 
+# ---------------------------------------------------------------------------
+# multilevel bisection drivers
+# ---------------------------------------------------------------------------
 def _bisect(
     hg: Hypergraph,
     k0: int,
@@ -333,31 +439,60 @@ def _bisect(
     part_cap: float,
     rng: np.random.Generator,
     coarsen_to: int = 160,
+    engine: str = "flat",
+    multilevel: bool = True,
 ) -> np.ndarray:
     """Multilevel bisection into sides destined for k0 and k1 parts.
 
     ``part_cap`` is the GLOBAL maximum per-part weight (1+eps) * W_total / p;
     the side caps are k_side * part_cap so imbalance cannot compound down the
-    recursion."""
+    recursion.
+
+    With ``multilevel=False`` the flat engine skips per-bisection
+    coarsening: ``partition`` already ran the shared global V-cycle, so this
+    bisects what is effectively a coarse graph directly (initial growth +
+    gain-bucket FM).  The loop engine always re-coarsens each subproblem
+    with pairwise matching, as the original implementation did."""
     total = float(hg.w_comp.sum())
     frac0 = k0 / (k0 + k1)
+    max_w = (k0 * part_cap, k1 * part_cap)
     levels: list[tuple[Hypergraph, np.ndarray]] = []
     cur = hg
-    heaviest = float(cur.w_comp.max()) if cur.n_vertices else 0.0
-    while cur.n_vertices > coarsen_to:
-        cmap = _match_vertices(cur, rng, max_weight=max(total / 10, heaviest))
-        nxt, n_coarse = _coarsen(cur, cmap)
-        if n_coarse >= cur.n_vertices * 0.95:  # matching stalled
-            break
-        levels.append((cur, cmap))
-        cur = nxt
+    if engine == "loop" or multilevel:
+        heaviest = float(cur.w_comp.max()) if cur.n_vertices else 0.0
+        cluster_cap = max(total / 10, heaviest)
+        while cur.n_vertices > coarsen_to:
+            if engine == "flat":
+                cmap = _cluster_vertices(cur, max_weight=cluster_cap)
+                nxt, n_coarse = _coarsen(cur, cmap, big_net_cap=BIG_NET)
+            else:
+                cmap = _match_vertices_loop(cur, rng, max_weight=cluster_cap)
+                nxt, n_coarse = _coarsen(cur, cmap)
+            if n_coarse >= cur.n_vertices * 0.95:  # clustering stalled
+                break
+            levels.append((cur, cmap))
+            cur = nxt
 
-    max_w = (k0 * part_cap, k1 * part_cap)
-    side = _initial_bisect(cur, min(total * frac0, max_w[0]), rng)
-    side = _fm_refine(cur, side, max_w, rng=rng)
-    for fine, cmap in reversed(levels):
-        side = side[cmap]
-        side = _fm_refine(fine, side, max_w, rng=rng)
+    if engine == "flat":
+        # tiny graphs get extra passes — each pass rolls back to its best
+        # prefix, so per-bisection passes are monotone and nearly free here
+        passes = 4 if hg.n_vertices <= 512 else 2
+        side = initial_bisect(
+            cur,
+            min(total * frac0, max_w[0]),
+            rng,
+            min0=total - max_w[1],  # side 1 must end under its own cap
+        )
+        side = fm_refine(cur, side, max_w, max_passes=passes)
+        for fine, cmap in reversed(levels):
+            side = side[cmap]
+            side = fm_refine(fine, side, max_w, max_passes=passes)
+    else:
+        side = _initial_bisect_loop(cur, min(total * frac0, max_w[0]), rng)
+        side = _fm_refine_loop(cur, side, max_w)
+        for fine, cmap in reversed(levels):
+            side = side[cmap]
+            side = _fm_refine_loop(fine, side, max_w)
     return side
 
 
@@ -367,7 +502,7 @@ def _restrict(hg: Hypergraph, mask: np.ndarray) -> tuple[Hypergraph, np.ndarray]
     ids = np.flatnonzero(mask)
     remap = np.full(hg.n_vertices, -1, dtype=np.int64)
     remap[ids] = np.arange(len(ids))
-    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), hg.net_sizes())
+    net_ids = hg.pin_nets()
     keep = mask[hg.net_pins]
     net_ids = net_ids[keep]
     pins = remap[hg.net_pins[keep]]
@@ -387,43 +522,115 @@ def _restrict(hg: Hypergraph, mask: np.ndarray) -> tuple[Hypergraph, np.ndarray]
     return sub, ids
 
 
+def _recursive_bisection(
+    hg: Hypergraph,
+    p: int,
+    part_cap: float,
+    rng: np.random.Generator,
+    engine: str,
+    multilevel: bool = True,
+) -> np.ndarray:
+    """K-way partition of ``hg`` via recursive bisection."""
+    parts = np.zeros(hg.n_vertices, dtype=np.int64)
+    stack: list[tuple[Hypergraph, np.ndarray, int, int]] = [
+        (hg, np.arange(hg.n_vertices), 0, p)
+    ]
+    while stack:
+        sub, ids, lo, hi = stack.pop()
+        k = hi - lo
+        if k == 1:
+            parts[ids] = lo
+            continue
+        k0 = k // 2
+        side = _bisect(
+            sub, k0, k - k0, part_cap, rng, engine=engine, multilevel=multilevel
+        )
+        for s, plo, phi in ((0, lo, lo + k0), (1, lo + k0, hi)):
+            mask = side == s
+            if not mask.any():
+                continue
+            if phi - plo == 1:
+                parts[ids[mask]] = plo
+            else:
+                ssub, sids = _restrict(sub, mask)
+                stack.append((ssub, ids[mask], plo, phi))
+    return parts
+
+
 def partition(
     hg: Hypergraph,
     p: int,
     eps: float = 0.03,
     seed: int = 0,
+    engine: str = "flat",
 ) -> PartitionResult:
-    """K-way partition via recursive bisection."""
+    """K-way partition via recursive bisection (+ a direct K-way pass).
+
+    ``engine="flat"`` is the gain-bucket flat-CSR engine (``core/refine.py``).
+    It shares one global V-cycle across the whole call: the fine hypergraph
+    is clustered once, recursive bisection runs on the coarse graph (where
+    its own inner cycles are nearly free), and each uncoarsening step is
+    followed by the direct K-way boundary pass — so the per-move refinement
+    never touches the finest graphs once per bisection the way the loop
+    engine does.
+
+    ``engine="loop"`` is the retained per-move reference implementation:
+    recursive bisection directly on the fine hypergraph, re-coarsening each
+    subproblem with pairwise matching.
+    """
     from repro.core.comm import evaluate
 
+    if engine not in ("flat", "loop"):
+        raise ValueError(f"unknown partition engine {engine!r}")
     rng = np.random.default_rng(seed)
     parts = np.zeros(hg.n_vertices, dtype=np.int64)
     if p > 1 and hg.n_vertices:
         # global per-part cap; heavy vertices can force violations (the paper
         # observes exactly this for 1D models on scale-free inputs, Sec. 6.3)
-        part_cap = max(
-            (1 + eps) * float(hg.w_comp.sum()) / p, float(hg.w_comp.max())
-        )
-        stack: list[tuple[Hypergraph, np.ndarray, int, int]] = [
-            (hg, np.arange(hg.n_vertices), 0, p)
-        ]
-        while stack:
-            sub, ids, lo, hi = stack.pop()
-            k = hi - lo
-            if k == 1:
-                parts[ids] = lo
-                continue
-            k0 = k // 2
-            side = _bisect(sub, k0, k - k0, part_cap, rng)
-            for s, plo, phi in ((0, lo, lo + k0), (1, lo + k0, hi)):
-                mask = side == s
-                if not mask.any():
-                    continue
-                if phi - plo == 1:
-                    parts[ids[mask]] = plo
-                else:
-                    ssub, sids = _restrict(sub, mask)
-                    stack.append((ssub, ids[mask], plo, phi))
+        total = float(hg.w_comp.sum())
+        part_cap = max((1 + eps) * total / p, float(hg.w_comp.max()))
+        if engine == "flat" and hg.n_vertices > SMALL_DIRECT:
+            # speed path: one shared global V-cycle; cluster caps stay well
+            # under a part so the coarse bisections can still balance
+            cluster_cap = max(min(total / 10, part_cap / 4), float(hg.w_comp.max()))
+            glob_target = max(256, 16 * p)
+            levels: list[tuple[Hypergraph, np.ndarray]] = []
+            cur = hg
+            while cur.n_vertices > glob_target:
+                cmap = _cluster_vertices(cur, max_weight=cluster_cap)
+                nxt, n_coarse = _coarsen(cur, cmap, big_net_cap=BIG_NET)
+                # a nearly-stalled level buys no structure but costs a
+                # cluster + K-way pass each; 0.8 keeps only useful levels
+                if n_coarse >= cur.n_vertices * 0.8:
+                    break
+                levels.append((cur, cmap))
+                cur = nxt
+            parts_cur = _recursive_bisection(
+                cur, p, part_cap, rng, engine, multilevel=False
+            )
+            parts_cur = kway_refine(cur, parts_cur, p, part_cap)
+            for fine, cmap in reversed(levels):
+                parts_cur = parts_cur[cmap]
+                parts_cur = kway_refine(fine, parts_cur, p, part_cap)
+            parts = parts_cur
+        elif engine == "flat":
+            # quality path: full per-bisection multilevel + K-way pass, and
+            # the engine is fast enough at this size to take the best of a
+            # few independent starts (still deterministic for a fixed seed).
+            # Starts rank by (balance feasibility, connectivity): a feasible
+            # start always beats an infeasible one, however good its cut.
+            best_key = None
+            for _try in range(SMALL_STARTS):
+                cand = _recursive_bisection(hg, p, part_cap, rng, engine)
+                cand = kway_refine(hg, cand, p, part_cap, max_rounds=16)
+                conn = evaluate(hg, cand, p).connectivity
+                cand_w = np.bincount(cand, weights=hg.w_comp, minlength=p)
+                infeasible = bool(cand_w.max() > part_cap + 1e-9)
+                key = (infeasible, conn)
+                if best_key is None or key < best_key:
+                    best_key, parts = key, cand
+        else:
+            parts = _recursive_bisection(hg, p, part_cap, rng, engine)
     conn = evaluate(hg, parts, p).connectivity
     return PartitionResult(parts=parts, p=p, connectivity=conn)
 

@@ -45,12 +45,12 @@ def _kernel(pa_ref, pb_ref, pc_ref, a_ref, b_ref, o_ref, *, acc_dtype):
 @functools.partial(
     jax.jit, static_argnames=("n_c_blocks", "interpret", "acc_dtype")
 )
-def bsr_spgemm(
-    a_blocks: jnp.ndarray,  # (na, bm, bk)
-    b_blocks: jnp.ndarray,  # (nb, bk, bn)
-    pair_a: jnp.ndarray,  # (np,) int32, index into a_blocks
-    pair_b: jnp.ndarray,  # (np,) int32
-    pair_c: jnp.ndarray,  # (np,) int32 sorted ascending (runs per C block)
+def _bsr_spgemm_jit(
+    a_blocks: jnp.ndarray,
+    b_blocks: jnp.ndarray,
+    pair_a: jnp.ndarray,
+    pair_b: jnp.ndarray,
+    pair_c: jnp.ndarray,
     n_c_blocks: int,
     interpret: bool = False,
     acc_dtype=jnp.float32,
@@ -74,14 +74,41 @@ def bsr_spgemm(
         out_shape=jax.ShapeDtypeStruct((n_c_blocks, bm, bn), out_dtype),
         interpret=interpret,
         compiler_params=tpu_compiler_params(dimension_semantics=("arbitrary",)),
-    )(
-        pair_a.astype(jnp.int32),
-        pair_b.astype(jnp.int32),
-        pair_c.astype(jnp.int32),
+    )(pair_a, pair_b, pair_c, a_blocks, b_blocks)
+    return out
+
+
+def bsr_spgemm(
+    a_blocks: jnp.ndarray,  # (na, bm, bk)
+    b_blocks: jnp.ndarray,  # (nb, bk, bn)
+    pair_a: jnp.ndarray,  # (np,) int, index into a_blocks
+    pair_b: jnp.ndarray,  # (np,) int
+    pair_c: jnp.ndarray,  # (np,) int sorted ascending (runs per C block)
+    n_c_blocks: int,
+    interpret: bool = False,
+    acc_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Host-casts the pair lists to int32 before entering the jitted call:
+    the inspector emits int64, and casting inside jit meant every invocation
+    traced/ran an extra convert_element_type on the scalar-prefetch path.
+    Traced operands (the shard_map executor path) pass through unchanged —
+    they are already int32 there."""
+    pair_a, pair_b, pair_c = (
+        jnp.asarray(np.asarray(x, dtype=np.int32))
+        if isinstance(x, (np.ndarray, list, tuple))
+        else (x if x.dtype == jnp.int32 else x.astype(jnp.int32))
+        for x in (pair_a, pair_b, pair_c)
+    )
+    return _bsr_spgemm_jit(
         a_blocks,
         b_blocks,
+        pair_a,
+        pair_b,
+        pair_c,
+        n_c_blocks,
+        interpret=interpret,
+        acc_dtype=acc_dtype,
     )
-    return out
 
 
 def build_pair_lists(

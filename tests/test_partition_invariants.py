@@ -1,0 +1,152 @@
+"""Partitioner-engine invariants: the flat-CSR engine (core/refine.py) vs
+the retained loop-FM executable specification (partition engine="loop").
+
+The two engines are not move-for-move identical (gain buckets visit
+candidates in a different order than the per-move argmax), so the gate is
+on the *outcomes*: balance-cap respect, self-consistent reported
+connectivity, determinism, and equal-or-better connectivity than the loop
+reference in aggregate over small random instances (with a small per-case
+tolerance — multilevel heuristics are noisy per instance)."""
+import numpy as np
+import pytest
+
+from repro.core import SpGEMMInstance, build_model, evaluate, partition
+from repro.core.refine import compute_counts, fm_refine, initial_bisect, kway_refine
+from repro.sparse.structure import random_structure
+
+
+def _instance(seed=0, shape=(60, 50, 55), density=0.08):
+    rng = np.random.default_rng(seed)
+    a = random_structure(shape[0], shape[1], density, rng)
+    b = random_structure(shape[1], shape[2], density, rng)
+    return SpGEMMInstance(a, b)
+
+
+# ---------------------------------------------------------------------------
+# balance + self-consistency
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p,eps", [(2, 0.05), (4, 0.10), (8, 0.10)])
+def test_balance_cap_respected_or_heavy_forced(p, eps):
+    hg = build_model(_instance(1, shape=(90, 70, 80)), "rowwise")
+    res = partition(hg, p, eps=eps, seed=0)
+    w = hg.w_comp.astype(np.float64)
+    part_w = np.bincount(res.parts, weights=w, minlength=p)
+    cap = max((1 + eps) * w.sum() / p, float(w.max()))
+    # the cap is the driver's own invariant: every part fits, except where a
+    # single heavy vertex forces a violation (then the part is that cap)
+    assert (part_w <= cap + 1e-9).all()
+
+
+@pytest.mark.parametrize("model", ["rowwise", "fine", "monoC"])
+def test_reported_connectivity_matches_fresh_evaluation(model):
+    hg = build_model(_instance(2), model)
+    for p in (2, 5):
+        res = partition(hg, p, eps=0.10, seed=3)
+        assert res.connectivity == evaluate(hg, res.parts, p).connectivity
+
+
+def test_determinism_for_fixed_seed():
+    hg = build_model(_instance(3, shape=(80, 60, 70)), "rowwise")
+    a = partition(hg, 4, eps=0.10, seed=7)
+    b = partition(hg, 4, eps=0.10, seed=7)
+    assert np.array_equal(a.parts, b.parts)
+    assert a.connectivity == b.connectivity
+    c = partition(hg, 4, eps=0.10, seed=8)
+    # different seed is allowed to (and generally does) differ
+    assert c.parts.shape == a.parts.shape
+
+
+# ---------------------------------------------------------------------------
+# flat engine vs loop reference
+# ---------------------------------------------------------------------------
+def test_flat_connectivity_not_worse_than_loop_reference():
+    """Aggregate equal-or-better over a grid of small random instances, and
+    never more than 15% worse on any single cell."""
+    tot_flat = tot_loop = 0
+    for seed in (0, 4, 5):
+        inst = _instance(seed, shape=(60 + 10 * seed, 50 + 5 * seed, 55))
+        for model in ("rowwise", "fine"):
+            hg = build_model(inst, model)
+            for p in (2, 4):
+                cf = partition(hg, p, eps=0.10, seed=seed).connectivity
+                cl = partition(hg, p, eps=0.10, seed=seed, engine="loop").connectivity
+                assert cf <= 1.15 * cl, f"{model}/p{p}/seed{seed}: {cf} vs {cl}"
+                tot_flat += cf
+                tot_loop += cl
+    assert tot_flat <= tot_loop
+
+
+def test_unknown_engine_rejected():
+    hg = build_model(_instance(0), "rowwise")
+    with pytest.raises(ValueError):
+        partition(hg, 2, engine="vectorized")
+
+
+# ---------------------------------------------------------------------------
+# refinement-engine unit invariants
+# ---------------------------------------------------------------------------
+def test_fm_refine_never_worsens_the_cut():
+    hg = build_model(_instance(6, shape=(70, 60, 65)), "rowwise")
+    rng = np.random.default_rng(0)
+    side = rng.integers(0, 2, hg.n_vertices).astype(np.int8)
+    w = hg.w_comp.astype(np.float64)
+    cap = 0.6 * w.sum()
+    before = evaluate(hg, side.astype(np.int64), 2).connectivity
+    after_side = fm_refine(hg, side, (cap, cap))
+    after = evaluate(hg, after_side.astype(np.int64), 2).connectivity
+    assert after <= before
+
+
+def test_kway_refine_monotone_and_balance_preserving():
+    hg = build_model(_instance(7, shape=(80, 70, 75)), "fine")
+    p = 5
+    rng = np.random.default_rng(1)
+    parts = rng.integers(0, p, hg.n_vertices)
+    w = hg.w_comp.astype(np.float64)
+    cap = max(1.25 * w.sum() / p, float(w.max()))
+    before = evaluate(hg, parts, p).connectivity
+    bw = np.bincount(parts, weights=w, minlength=p)
+    refined = kway_refine(hg, parts, p, cap)
+    after = evaluate(hg, refined, p).connectivity
+    assert after <= before
+    aw = np.bincount(refined, weights=w, minlength=p)
+    # no part exceeds the cap unless it already did before the pass
+    for q in range(p):
+        assert aw[q] <= cap + 1e-9 or aw[q] <= bw[q] + 1e-9
+
+
+def test_kway_refine_restricted_mode_monotone():
+    """Forcing the cut-net-restricted fallback (dense_cell_cap=1) must still
+    improve monotonically and respect the cap — it is the only refiner the
+    speed path has at paper scale."""
+    hg = build_model(_instance(11, shape=(120, 90, 100)), "fine")
+    p = 6
+    rng = np.random.default_rng(3)
+    parts = rng.integers(0, p, hg.n_vertices)
+    w = hg.w_comp.astype(np.float64)
+    cap = max(1.25 * w.sum() / p, float(w.max()))
+    before = evaluate(hg, parts, p).connectivity
+    refined = kway_refine(hg, parts, p, cap, dense_cell_cap=1)
+    after = evaluate(hg, refined, p).connectivity
+    assert after <= before
+    assert (np.bincount(refined, weights=w, minlength=p) <= cap + 1e-9).all()
+
+
+def test_initial_bisect_hits_weight_target():
+    hg = build_model(_instance(8, shape=(90, 80, 85)), "rowwise")
+    w = hg.w_comp.astype(np.float64)
+    target = 0.5 * w.sum()
+    side = initial_bisect(hg, target, np.random.default_rng(0))
+    got = w[side == 0].sum()
+    assert 0.8 * target <= got <= 1.1 * target
+
+
+def test_compute_counts_matches_bruteforce():
+    hg = build_model(_instance(9), "fine")
+    rng = np.random.default_rng(2)
+    side = rng.integers(0, 2, hg.n_vertices).astype(np.int8)
+    cnt = compute_counts(hg, side)
+    for n in range(0, hg.n_nets, max(hg.n_nets // 40, 1)):
+        pins = hg.pins_of(n)
+        assert cnt[n, 0] == int((side[pins] == 0).sum())
+        assert cnt[n, 1] == int((side[pins] == 1).sum())
