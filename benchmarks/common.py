@@ -149,6 +149,15 @@ def run_geometric_cell(inst, model: str, p: int, parts: np.ndarray, tag: str) ->
     }
 
 
+def random_valued_dense(struct, rng, dtype=np.float32) -> np.ndarray:
+    """Dense array with random normal values on a SparseStructure's nonzeros
+    (the executor suites' standard way to put numbers on a fixed pattern)."""
+    dense = np.zeros(struct.shape, dtype=dtype)
+    r, c = struct.coo()
+    dense[r, c] = rng.standard_normal(len(r)).astype(dtype)
+    return dense
+
+
 def emit(records: list[dict], out_dir: str | None, fname: str) -> None:
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)

@@ -12,7 +12,7 @@ import argparse
 import sys
 
 from benchmarks import bench_amg, bench_bounds, bench_kernels, bench_lp, bench_mcl, bench_tab2
-from benchmarks import bench_partition, bench_plan_build, roofline
+from benchmarks import bench_partition, bench_plan_build, bench_select, roofline
 from benchmarks.common import csv_lines
 
 SUITES = {
@@ -24,6 +24,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "plan": bench_plan_build.run,
     "partition": bench_partition.run,
+    "select": bench_select.run,
     "roofline": roofline.run,
 }
 
@@ -40,9 +41,14 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--full", action="store_true", help="alias for --scale paper (kept for CI)"
     )
+    ap.add_argument(
+        "--quick", action="store_true", help="alias for --scale small (CI smoke)"
+    )
     ap.add_argument("--only", default=None, choices=list(SUITES))
     ap.add_argument("--out", default="experiments/paper")
     args = ap.parse_args(argv)
+    if args.quick and (args.full or args.scale == "paper"):
+        ap.error("--quick conflicts with --full/--scale paper")
     scale = args.scale or ("paper" if args.full else "small")
 
     print("name,us_per_call,derived")

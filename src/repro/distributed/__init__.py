@@ -1,16 +1,23 @@
 """Distributed SpGEMM executors (shard_map) + inspector-executor planning."""
 from repro.distributed.plan_ir import (
     ExecutionPlan,
+    FinePlan,
     MonoCPlan,
     OuterPlan,
     Route,
     RowwisePlan,
+    build_fine_plan,
     build_monoC_plan,
     build_outer_plan,
     build_rowwise_plan,
+    build_volume_plan,
+    derive_owner_from_pins,
+    plan_fine_from_dense,
+    plan_monoC_from_dense,
 )
 from repro.distributed.plan import build_rowwise_plan_loop
 from repro.distributed.spgemm_exec import (
+    fine_spgemm,
     monoC_spgemm,
     outer_product_spgemm,
     rowwise_spgemm,
@@ -23,12 +30,19 @@ __all__ = [
     "RowwisePlan",
     "OuterPlan",
     "MonoCPlan",
+    "FinePlan",
     "build_rowwise_plan",
     "build_rowwise_plan_loop",
     "build_outer_plan",
     "build_monoC_plan",
+    "build_fine_plan",
+    "build_volume_plan",
+    "derive_owner_from_pins",
+    "plan_fine_from_dense",
+    "plan_monoC_from_dense",
     "rowwise_spgemm",
     "outer_product_spgemm",
     "monoC_spgemm",
+    "fine_spgemm",
     "spsumma",
 ]

@@ -59,10 +59,28 @@ class Route:
     items_ideal: int  # (cut net, touched part) pairs = connectivity volume
     items_padded: int  # p * p * T actually shipped
     word_size: int = 1
+    # per-item word accounting: when items carry different payload sizes
+    # (e.g. a B row of nnz(row k) useful words), the cost-weighted ideal
+    # volume and the static-slot padded volume (every slot sized to the
+    # largest shipped item) are stored here; None means uniform word_size.
+    words_ideal_override: int | None = None
+    words_padded_override: int | None = None
 
     @property
     def T(self) -> int:
         return self.send_idx.shape[-1]
+
+    @property
+    def words_ideal(self) -> int:
+        if self.words_ideal_override is not None:
+            return int(self.words_ideal_override)
+        return int(self.items_ideal * self.word_size)
+
+    @property
+    def words_padded(self) -> int:
+        if self.words_padded_override is not None:
+            return int(self.words_padded_override)
+        return int(self.items_padded * self.word_size)
 
     @property
     def padding_fraction(self) -> float:
@@ -83,12 +101,12 @@ class ExecutionPlan:
 
     @property
     def comm_words_ideal(self) -> int:
-        route_words = sum(r.items_ideal * r.word_size for r in self.routes.values())
+        route_words = sum(r.words_ideal for r in self.routes.values())
         return int(route_words + self.stats.get("fold_words_ideal", 0))
 
     @property
     def comm_words_padded(self) -> int:
-        route_words = sum(r.items_padded * r.word_size for r in self.routes.values())
+        route_words = sum(r.words_padded for r in self.routes.values())
         return int(route_words + self.stats.get("fold_words_padded", 0))
 
     @property
@@ -129,6 +147,8 @@ def build_route(
     p: int,
     payload: str,
     word_size: int = 1,
+    send_slot: np.ndarray | None = None,
+    item_words: np.ndarray | None = None,
 ) -> Route:
     """Lower a transfer list to a padded all_to_all routing table.
 
@@ -137,6 +157,11 @@ def build_route(
     Entries must arrive sorted by item id; the stable per-(src, dst) grouping
     then keeps items ascending inside each cell, matching the loop-based
     reference builder byte for byte.
+
+    ``send_slot`` overrides the sender-local slot per transfer when an item's
+    slot depends on the sender (e.g. partial-C tables, where one C nonzero is
+    produced on several devices); ``item_words`` gives per-item useful word
+    counts for cost-weighted volume accounting (non-uniform net costs).
     """
     n = len(item)
     order = np.argsort(src * p + dst, kind="stable")
@@ -148,8 +173,14 @@ def build_route(
     slot = np.arange(n, dtype=np.int64) - np.repeat(starts, counts)
     send_idx = np.full((p, p, T), -1, dtype=np.int64)
     recv_key = np.full((p, p, T), -1, dtype=np.int64)
-    send_idx[s_o, d_o, slot] = local_of[it_o]
+    send_idx[s_o, d_o, slot] = send_slot[order] if send_slot is not None else local_of[it_o]
     recv_key[s_o, d_o, slot] = it_o
+    words_ideal = words_padded = None
+    if item_words is not None:
+        words_ideal = int(item_words[item].sum())
+        # an executor's all_to_all slots are statically sized to the largest
+        # shipped item, so the padded wire volume scales with that maximum
+        words_padded = p * p * T * int(item_words[item].max(initial=0)) if n else 0
     return Route(
         payload=payload,
         send_idx=send_idx,
@@ -157,6 +188,8 @@ def build_route(
         items_ideal=n,
         items_padded=p * p * T if n else 0,
         word_size=word_size,
+        words_ideal_override=words_ideal,
+        words_padded_override=words_padded,
     )
 
 
@@ -178,6 +211,30 @@ def _expand_transfers(
     srcs = item_owner[items]
     keep = dsts != srcs
     return srcs[keep], dsts[keep], items[keep]
+
+
+def derive_owner_from_pins(
+    item_of_need: np.ndarray,
+    part_of_need: np.ndarray,
+    n_items: int,
+    p: int,
+) -> np.ndarray:
+    """Assign each item to the lowest-numbered part that needs it.
+
+    This is the paper's omitted-V^nz reading of the connectivity metric: a
+    nonzero resides on one of the parts whose computation touches it, so a
+    cut net of connectivity lambda costs exactly lambda - 1 transfers.  With
+    ownership derived this way, every route's ``items_ideal`` equals the
+    hypergraph connectivity contribution of its nets — predicted == planned.
+    Items no computation touches (dead nonzeros) fall back to round-robin;
+    they never generate traffic either way.
+    """
+    pairs = np.unique(item_of_need * p + part_of_need)  # sorted (item, part)
+    items, parts = pairs // p, pairs % p
+    first_item, first_pos = np.unique(items, return_index=True)
+    owner = np.arange(n_items, dtype=np.int64) % p
+    owner[first_item] = parts[first_pos]  # min part per item: pairs are sorted
+    return owner
 
 
 # ---------------------------------------------------------------------------
@@ -461,3 +518,283 @@ def plan_monoC_from_dense(
     res = partition(hg, p, eps=eps, seed=seed)
     plan = build_monoC_plan(inst, res.parts, p, word_size=block * block)
     return plan, inst
+
+
+# ---------------------------------------------------------------------------
+# 3D fine-grained (Def. 3.1)
+# ---------------------------------------------------------------------------
+class FinePlan(ExecutionPlan):
+    """Fine-grained plan: an arbitrary flop-level partition made executable.
+
+    Vertices of the fine hypergraph are scalar multiplications a_ik * b_kj;
+    the partition assigns each to a device.  Ownership maps distribute the
+    A, B and C nonzeros (derived from the pins when not given, so a cut net
+    of connectivity lambda costs exactly lambda - 1 transfers — predicted
+    connectivity == planned words).  Three routes realize the three net
+    families: ``expand_a`` / ``expand_b`` ship cut A-/B-nets before local
+    compute, ``reduce_c`` ships partial C contributions to each C nonzero's
+    owner afterwards — the paper's expand-expand-reduce schedule.
+
+    Per-device state the executor mirrors:
+
+    - operand slot tables ``[owned | received | zero]`` (as monoC);
+    - a *produced-C* table: slot r on device d accumulates d's partial sum
+      for the r-th distinct C nonzero d's multiplications contribute to
+      (``local_ids["c_prod"]``), plus a trailing garbage slot for padding;
+    - ``compute["pair_*"]``: padded (p, P_max) multiplication lists in slot
+      coordinates — pair_a/pair_b index the operand tables, pair_c the
+      produced table;
+    - ``compute["reduce_recv_slot"]``: (p, p, T_r) owned-C slot each arriving
+      reduce item folds into (-1 padding);
+    - ``compute["prod_to_owned"]``: (p, R_max) owned-C slot of each produced
+      slot when the producer already owns that C nonzero (-1 otherwise).
+    """
+
+    @property
+    def mult_part(self) -> np.ndarray:
+        return self.ownership["mult"]
+
+    @property
+    def a_part(self) -> np.ndarray:
+        return self.ownership["a_nz"]
+
+    @property
+    def b_part(self) -> np.ndarray:
+        return self.ownership["b_nz"]
+
+    @property
+    def c_part(self) -> np.ndarray:
+        return self.ownership["c_nz"]
+
+    @property
+    def a_table_slots(self) -> int:
+        return self.local_ids["a_nz"].shape[1] + self.p * self.routes["expand_a"].T + 1
+
+    @property
+    def b_table_slots(self) -> int:
+        return self.local_ids["b_nz"].shape[1] + self.p * self.routes["expand_b"].T + 1
+
+    @property
+    def n_prod_slots(self) -> int:
+        """Produced-C slots incl. the trailing garbage slot padding pairs hit."""
+        return self.local_ids["c_prod"].shape[1] + 1
+
+    @property
+    def n_c_slots(self) -> int:
+        """Owned-C slots incl. the trailing garbage slot padded arrivals hit."""
+        return self.local_ids["c_nz"].shape[1] + 1
+
+
+def build_fine_plan(
+    inst: SpGEMMInstance,
+    mult_part: np.ndarray,
+    p: int,
+    a_part: np.ndarray | None = None,
+    b_part: np.ndarray | None = None,
+    c_part: np.ndarray | None = None,
+    word_size: int = 1,
+) -> FinePlan:
+    """Lower a fine-grained (flop-level) partition to an executable plan.
+
+    ``mult_part`` is either a partition of the M multiplication vertices
+    (the include_nz=False fine hypergraph) or of the full include_nz vertex
+    set — in the latter case the nonzero-vertex assignments become the
+    ownership maps.  Ownership not provided either way is derived from the
+    pins (``derive_owner_from_pins``), which makes ``comm_words_ideal``
+    equal the fine hypergraph's connectivity cost exactly.
+    """
+    M = inst.n_mult
+    nA, nB, nC = inst.a.nnz, inst.b.nnz, inst.c.nnz
+    mult_part = np.asarray(mult_part, dtype=np.int64)
+    if len(mult_part) == M + nA + nB + nC and nA + nB + nC:
+        if a_part is None:
+            a_part = mult_part[M : M + nA]
+        if b_part is None:
+            b_part = mult_part[M + nA : M + nA + nB]
+        if c_part is None:
+            c_part = mult_part[M + nA + nB :]
+        mult_part = mult_part[:M]
+    elif len(mult_part) != M:
+        raise ValueError(
+            f"mult_part has {len(mult_part)} entries; expected {M} "
+            f"(multiplications) or {M + nA + nB + nC} (include_nz vertices)"
+        )
+    mult_dev = mult_part
+    a_pos, b_pos, c_pos = inst.mult_a_pos, inst.mult_b_pos, inst.mult_c_pos
+    if a_part is None:
+        a_part = derive_owner_from_pins(a_pos, mult_dev, nA, p)
+    else:
+        a_part = np.asarray(a_part, dtype=np.int64)
+    if b_part is None:
+        b_part = derive_owner_from_pins(b_pos, mult_dev, nB, p)
+    else:
+        b_part = np.asarray(b_part, dtype=np.int64)
+    if c_part is None:
+        c_part = derive_owner_from_pins(c_pos, mult_dev, nC, p)
+    else:
+        c_part = np.asarray(c_part, dtype=np.int64)
+
+    # expand routes: exactly the cut A-/B-net traffic of the fine partition
+    local_a, local_of_a = padded_id_lists(a_part, p)
+    src, dst, items = _expand_transfers(a_pos, mult_dev, a_part, p)
+    route_a = build_route(src, dst, items, local_of_a, p, "A", word_size)
+    local_b, local_of_b = padded_id_lists(b_part, p)
+    src, dst, items = _expand_transfers(b_pos, mult_dev, b_part, p)
+    route_b = build_route(src, dst, items, local_of_b, p, "B", word_size)
+    local_c, local_of_c = padded_id_lists(c_part, p)
+
+    # produced-C table: the distinct C nonzeros each device contributes to,
+    # device-major with ascending C ids (one partial-sum slot per entry)
+    prod_pairs = np.unique(mult_dev * max(nC, 1) + c_pos)
+    prod_dev, prod_c = prod_pairs // max(nC, 1), prod_pairs % max(nC, 1)
+    prod_counts = np.bincount(prod_dev, minlength=p)
+    R_max = max(int(prod_counts.max(initial=0)), 1)
+    starts = np.cumsum(prod_counts) - prod_counts
+    rank = np.arange(len(prod_dev), dtype=np.int64) - np.repeat(starts, prod_counts)
+    prod_ids = np.full((p, R_max), -1, dtype=np.int64)
+    prod_ids[prod_dev, rank] = prod_c
+    prod_slot = np.full((p, nC), -1, dtype=np.int64)
+    prod_slot[prod_dev, prod_c] = rank
+
+    # per-device multiplication lists in slot coordinates (one lexsort)
+    a_slots = _table_slots(a_part, local_of_a, route_a, nA, p)
+    b_slots = _table_slots(b_part, local_of_b, route_b, nB, p)
+    pa = a_slots[mult_dev, a_pos]
+    pb = b_slots[mult_dev, b_pos]
+    pc = prod_slot[mult_dev, c_pos]
+    assert (pa >= 0).all() and (pb >= 0).all() and (pc >= 0).all(), (
+        "routing missed a needed nonzero"
+    )
+    order = np.lexsort((pb, pa, pc, mult_dev))
+    pa, pb, pc, dev = pa[order], pb[order], pc[order], mult_dev[order]
+    counts = np.bincount(dev, minlength=p)
+    P_max = max(int(counts.max(initial=0)), 1)
+    starts = np.cumsum(counts) - counts
+    rank = np.arange(len(dev), dtype=np.int64) - np.repeat(starts, counts)
+    A_max, B_max = local_a.shape[1], local_b.shape[1]
+    pair_a = np.full((p, P_max), A_max + p * route_a.T, dtype=np.int64)
+    pair_b = np.full((p, P_max), B_max + p * route_b.T, dtype=np.int64)
+    pair_c = np.full((p, P_max), R_max, dtype=np.int64)
+    pair_a[dev, rank] = pa
+    pair_b[dev, rank] = pb
+    pair_c[dev, rank] = pc
+
+    # reduce route: every (C net, producing part) pair with a foreign owner —
+    # the cut C-net traffic.  Sender slots index the produced-C table.
+    red_pairs = np.unique(c_pos * p + mult_dev)  # item-major (c, part)
+    r_item, r_src = red_pairs // p, red_pairs % p
+    r_dst = c_part[r_item]
+    keep = r_src != r_dst
+    route_r = build_route(
+        r_src[keep],
+        r_dst[keep],
+        r_item[keep],
+        local_of_c,
+        p,
+        "C",
+        word_size,
+        send_slot=prod_slot[r_src[keep], r_item[keep]],
+    )
+    recv_slot = np.where(
+        route_r.recv_key >= 0, local_of_c[np.maximum(route_r.recv_key, 0)], -1
+    )
+    # produced slots the device itself owns fold straight into owned C slots
+    prod_owned = np.full((p, R_max), -1, dtype=np.int64)
+    d_ids, s_ids = np.nonzero(prod_ids >= 0)
+    gids = prod_ids[d_ids, s_ids]
+    own = c_part[gids] == d_ids
+    prod_owned[d_ids[own], s_ids[own]] = local_of_c[gids[own]]
+
+    return FinePlan(
+        model="fine",
+        p=p,
+        ownership={"mult": mult_dev, "a_nz": a_part, "b_nz": b_part, "c_nz": c_part},
+        local_ids={"a_nz": local_a, "b_nz": local_b, "c_nz": local_c, "c_prod": prod_ids},
+        routes={"expand_a": route_a, "expand_b": route_b, "reduce_c": route_r},
+        compute={
+            "pair_a": pair_a,
+            "pair_b": pair_b,
+            "pair_c": pair_c,
+            "reduce_recv_slot": recv_slot,
+            "prod_to_owned": prod_owned,
+        },
+        stats={"n_mult": int(M), "pairs_padded": int(p * P_max)},
+    )
+
+
+def plan_fine_from_dense(
+    a_dense: np.ndarray,
+    b_dense: np.ndarray,
+    p: int,
+    eps: float = 0.10,
+    seed: int = 0,
+    include_nz: bool = False,
+) -> tuple[FinePlan, SpGEMMInstance]:
+    """Model, partition, plan — the full fine-grained inspector pipeline.
+
+    Builds the fine hypergraph of the scalar nonzero structures, partitions
+    its multiplication vertices, and lowers the result to a ``FinePlan``.
+    With ``include_nz`` the partitioner also places the nonzero vertices and
+    those placements become the plan's ownership maps.
+    """
+    import scipy.sparse as sp
+
+    from repro.core.partition import partition
+    from repro.core.spgemm_models import build_model
+    from repro.sparse.structure import SparseStructure
+
+    a_s = SparseStructure.wrap(sp.csr_matrix(np.asarray(a_dense) != 0))
+    b_s = SparseStructure.wrap(sp.csr_matrix(np.asarray(b_dense) != 0))
+    inst = SpGEMMInstance(a_s, b_s, name="fine")
+    hg = build_model(inst, "fine", include_nz=include_nz)
+    res = partition(hg, p, eps=eps, seed=seed)
+    plan = build_fine_plan(inst, res.parts, p)
+    return plan, inst
+
+
+# ---------------------------------------------------------------------------
+# Generic predicted-volume plan (any model)
+# ---------------------------------------------------------------------------
+def build_volume_plan(hg, parts: np.ndarray, p: int) -> ExecutionPlan:
+    """Lower ANY model hypergraph + partition to net-granularity routes.
+
+    One route per net family (A-expand, B-expand, C-reduce), each shipping a
+    cut net from a pin-derived owner to every other touched part, weighted by
+    the net's cost.  ``comm_words_ideal`` therefore equals
+    ``comm.evaluate(hg, parts, p).connectivity`` — computed here by an
+    independent code path (transfer enumeration vs lambda counting), which is
+    what the predicted-vs-planned property test pins for all seven models.
+    Models with real executors refine this to item-granularity plans; this
+    one exists so every model's predicted volume has an IR representation.
+    """
+    parts = np.asarray(parts, dtype=np.int64)
+    pin_parts = parts[hg.net_pins]
+    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), hg.net_sizes())
+    owner = derive_owner_from_pins(net_ids, pin_parts, hg.n_nets, p)
+    kinds = (
+        hg.net_kind
+        if hg.net_kind is not None
+        else np.zeros(hg.n_nets, dtype=np.int8)
+    )
+    ident = np.arange(hg.n_nets, dtype=np.int64)
+    routes = {}
+    for kind, name, payload in (
+        (0, "expand", "N"),
+        (1, "expand_a", "A"),
+        (2, "expand_b", "B"),
+        (3, "reduce_c", "C"),
+    ):
+        sel = kinds[net_ids] == kind
+        if not sel.any():
+            continue
+        src, dst, items = _expand_transfers(net_ids[sel], pin_parts[sel], owner, p)
+        routes[name] = build_route(
+            src, dst, items, ident, p, payload, item_words=hg.net_cost
+        )
+    return ExecutionPlan(
+        model="volume",
+        p=p,
+        ownership={"net": owner},
+        local_ids={},
+        routes=routes,
+    )

@@ -1,0 +1,240 @@
+"""Sparsity-dependent model selection: the model zoo as an algorithm picker.
+
+The paper's seven hypergraph models are seven SpGEMM algorithms; which one
+communicates least depends on the sparsity structure of the instance.  This
+module closes the loop the models only predict:
+
+1. ``sweep_instance`` partitions *every* model of an instance and records
+   each one's predicted communication (the connectivity metric,
+   ``comm.evaluate``);
+2. for the models with executable plans it lowers the partition to an
+   ``ExecutionPlan`` whose routing tables are built by an independent code
+   path (transfer enumeration, ``plan_ir``), and counts the words those
+   tables actually ship (``measured_route_words``);
+3. when the process owns enough devices it runs the executors against the
+   dense oracle, so "the words the cut prescribes" and "the words the
+   program moves" are pinned to each other end to end.
+
+For replicated-free plans — fine-grained and monochrome-C, where every
+shipped item is a single nonzero payload — measured == predicted exactly.
+Row-wise ships whole dense B rows, so its measured *useful* words match the
+unit-cost prediction while its wire words exceed the nnz-weighted cost; the
+sweep reports both so the gap is visible, as is the padded all_to_all
+overhead for every route.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import build_model, evaluate, partition
+from repro.core.spgemm_models import MODELS, SpGEMMInstance
+from repro.distributed.plan_ir import (
+    ExecutionPlan,
+    build_fine_plan,
+    build_monoC_plan,
+    build_outer_plan,
+    build_rowwise_plan,
+    build_volume_plan,
+    derive_owner_from_pins,
+)
+
+#: models whose partitions we can lower to an item-granularity executable plan
+EXECUTABLE = ("rowwise", "outer", "monoC", "fine")
+
+
+def measured_route_words(
+    plan: ExecutionPlan, item_words: dict[str, np.ndarray] | None = None
+) -> int:
+    """Words the plan's routing tables actually ship (valid slots only).
+
+    Counted from the materialized ``recv_key`` tables — the executor moves
+    exactly these entries (plus padding) — NOT from the hypergraph's lambda
+    counting, so equality with ``evaluate().connectivity`` is a real check
+    that the cut and the schedule describe the same traffic.  ``item_words``
+    optionally maps a route name to per-global-item useful word counts
+    (e.g. nnz per shipped B row); routes not named count ``word_size`` per
+    item.  Fold-phase words tracked only in ``stats`` (the outer plan's
+    psum_scatter) are added as-is since that phase has no routing table.
+    """
+    words = 0
+    for name, r in plan.routes.items():
+        keys = r.recv_key[r.recv_key >= 0]
+        if item_words is not None and name in item_words:
+            words += int(item_words[name][keys].sum())
+        else:
+            words += len(keys) * r.word_size
+    return int(words + plan.stats.get("fold_words_ideal", 0))
+
+
+def build_executable_plan(
+    inst: SpGEMMInstance, model: str, parts: np.ndarray, p: int
+) -> ExecutionPlan | None:
+    """Lower a model partition to its executable plan, or None.
+
+    Nonzero ownership is derived from the pins (``derive_owner_from_pins``)
+    so each cut net of connectivity lambda costs exactly lambda - 1 shipped
+    items — the omitted-V^nz reading of the metric — making the planned
+    words comparable with the hypergraph prediction.
+    """
+    parts = np.asarray(parts, dtype=np.int64)
+    if model == "rowwise":
+        I, K, _ = inst.shape
+        acsc = inst.a_csc
+        ks = np.repeat(np.arange(K, dtype=np.int64), np.diff(acsc.indptr))
+        b_part = derive_owner_from_pins(
+            ks, parts[acsc.indices.astype(np.int64)], K, p
+        )
+        return build_rowwise_plan(inst, parts, p, b_part=b_part)
+    if model == "outer":
+        return build_outer_plan(inst, parts, p)
+    if model == "monoC":
+        mult_dev = parts[inst.mult_c_pos]
+        a_part = derive_owner_from_pins(inst.mult_a_pos, mult_dev, inst.a.nnz, p)
+        b_part = derive_owner_from_pins(inst.mult_b_pos, mult_dev, inst.b.nnz, p)
+        return build_monoC_plan(inst, parts, p, a_part=a_part, b_part=b_part)
+    if model == "fine":
+        return build_fine_plan(inst, parts, p)
+    return None
+
+
+def _execute(
+    inst: SpGEMMInstance,
+    model: str,
+    plan: ExecutionPlan,
+    a_dense: np.ndarray,
+    b_dense: np.ndarray,
+    want: np.ndarray,
+) -> dict:
+    """Run the executor for ``plan`` on a mesh over this process' devices and
+    report wall time + max error vs the dense oracle ``want`` (computed once
+    per instance by the caller).  Requires the process to own >= plan.p
+    devices (the multi-device CI job forces 8)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.distributed.spgemm_exec import (
+        fine_spgemm,
+        monoC_spgemm,
+        outer_product_spgemm,
+        rowwise_spgemm,
+        unpack_fine_result,
+        unpack_monoC_result,
+        unpack_rowwise_result,
+    )
+
+    p = plan.p
+    I, _, J = inst.shape
+    t0 = time.time()
+    if model == "rowwise":
+        mesh = Mesh(np.array(jax.devices()[:p]), ("x",))
+        got = unpack_rowwise_result(rowwise_spgemm(a_dense, b_dense, plan, mesh), plan, I)
+    elif model == "outer":
+        mesh = Mesh(np.array(jax.devices()[:p]), ("x",))
+        shards = np.asarray(outer_product_spgemm(a_dense, b_dense, plan, mesh))
+        got = shards.reshape(-1, J)[:I]
+    elif model == "monoC":
+        if p % 2:
+            return {"exec": f"skipped (odd p={p}; executor mesh is (2, p//2))"}
+        mesh = Mesh(np.array(jax.devices()[:p]).reshape(2, p // 2), ("x", "y"))
+        # scalar instance == 1x1 block structure; XLA local compute (no TPU)
+        c_local = monoC_spgemm(a_dense, b_dense, plan, mesh, block=1, backend="xla")
+        got = unpack_monoC_result(c_local, plan, inst.c, (I, J))
+    elif model == "fine":
+        mesh = Mesh(np.array(jax.devices()[:p]), ("x",))
+        got = unpack_fine_result(fine_spgemm(a_dense, b_dense, plan, mesh), plan, inst.c, (I, J))
+    else:
+        return {}
+    return {
+        "exec_s": round(time.time() - t0, 3),
+        "exec_max_err": float(np.abs(got[:I, :J] - want).max()),
+    }
+
+
+def sweep_instance(
+    inst: SpGEMMInstance,
+    p: int,
+    eps: float = 0.10,
+    seed: int = 0,
+    models: tuple[str, ...] = MODELS,
+    a_dense: np.ndarray | None = None,
+    b_dense: np.ndarray | None = None,
+    execute: bool = False,
+    pin_cap: int | None = None,
+) -> list[dict]:
+    """Partition every model, plan and (optionally) execute the executable
+    ones, and report predicted vs planned vs measured words per model.
+
+    Returns one record per model; the minimum ``predicted_words`` row is the
+    selected algorithm for this instance.  ``execute`` additionally runs the
+    executors when the process owns >= p devices (a no-op otherwise, so the
+    sweep is safe in single-device harness runs).
+    """
+    records = []
+    can_exec = False
+    if execute and a_dense is not None:
+        import jax
+
+        can_exec = jax.device_count() >= p
+    # the oracle matmul is only worth materializing when executors will run
+    want = a_dense @ b_dense if can_exec else None
+    for model in models:
+        t0 = time.time()
+        hg = build_model(inst, model)
+        if pin_cap is not None and hg.n_pins > pin_cap:
+            records.append(
+                {
+                    "name": f"{inst.name}/select/{model}/p{p}",
+                    "model": model,
+                    "status": "skipped",
+                    "reason": f"pins {hg.n_pins} > cap {pin_cap}",
+                }
+            )
+            continue
+        res = partition(hg, p, eps=eps, seed=seed)
+        costs = evaluate(hg, res.parts, p)
+        vol_plan = build_volume_plan(hg, res.parts, p)
+        rec = {
+            "name": f"{inst.name}/select/{model}/p{p}",
+            "model": model,
+            "status": "ok",
+            "us_per_call": int((time.time() - t0) * 1e6),
+            "n_vertices": hg.n_vertices,
+            "n_pins": hg.n_pins,
+            "predicted_words": int(costs.connectivity),
+            "predicted_max_part": int(costs.max_part_cost),
+            "volume_plan_words": vol_plan.comm_words_ideal,
+            "comp_imbalance": round(costs.comp_imbalance, 4),
+            "executable": model in EXECUTABLE,
+        }
+        assert rec["volume_plan_words"] == rec["predicted_words"], (
+            f"{model}: volume plan diverged from connectivity metric"
+        )
+        plan = build_executable_plan(inst, model, res.parts, p)
+        if plan is not None:
+            if model == "rowwise":
+                # the route ships whole B rows; nnz-weighting its table
+                # entries recovers the model's useful-word prediction, while
+                # the unit count is the number of row transfers
+                rec["measured_words"] = measured_route_words(
+                    plan, {"expand": inst.b.row_counts()}
+                )
+                rec["measured_items"] = measured_route_words(plan)
+            else:
+                rec["measured_words"] = measured_route_words(plan)
+            rec["padded_words"] = plan.comm_words_padded
+            if execute and a_dense is not None:
+                if can_exec:
+                    rec.update(_execute(inst, model, plan, a_dense, b_dense, want))
+                else:
+                    import jax
+
+                    rec["exec"] = f"skipped ({jax.device_count()} device(s) < p={p})"
+        records.append(rec)
+    ok = [r for r in records if r["status"] == "ok"]
+    if ok:
+        best = min(ok, key=lambda r: r["predicted_words"])
+        for r in records:
+            r["selected"] = r is best
+    return records

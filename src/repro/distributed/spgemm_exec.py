@@ -14,6 +14,13 @@ These realize the paper's algorithm classes as compiled JAX programs:
   (``bsr_spgemm_local``, interpret-mode fallback on CPU) so the executor's
   arithmetic is exactly the coarsened multiplication vertices the model
   counts.
+- ``fine_spgemm``: 3D fine-grained (Def. 3.1) — an arbitrary flop-level
+  partition drives an expand-expand-reduce schedule: two padded
+  ``all_to_all`` phases ship the cut A- and B-nets, each device evaluates
+  exactly its multiplication vertices into a produced-partial-C table, and a
+  third ``all_to_all`` (the cut C-nets) folds foreign partials into each
+  C nonzero's owner.  Every word any phase moves is one (cut net, part)
+  pair of the partition — the connectivity metric made executable.
 - ``spsumma``: the sparsity-independent 2D baseline (Buluç–Gilbert SpSUMMA):
   stationary-C with A broadcast along mesh rows and B along mesh columns.
 
@@ -33,7 +40,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
-from repro.distributed.plan_ir import MonoCPlan, OuterPlan, RowwisePlan
+from repro.distributed.plan_ir import FinePlan, MonoCPlan, OuterPlan, RowwisePlan
 
 
 def _take0(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
@@ -317,3 +324,131 @@ def unpack_monoC_result(
     gids = local_c[dev, slot]
     out[crow[gids], ccol[gids]] = c_np[dev, slot]
     return out.transpose(0, 2, 1, 3).reshape(shape)
+
+
+def fine_spgemm(
+    a_dense: np.ndarray,
+    b_dense: np.ndarray,
+    plan: FinePlan,
+    mesh: Mesh,
+    axis: str = "x",
+) -> jnp.ndarray:
+    """3D fine-grained SpGEMM (Def. 3.1): expand-expand-reduce.
+
+    ``plan`` is a ``FinePlan`` over the scalar nonzero structures of the
+    operands (``plan_ir.plan_fine_from_dense`` builds both).  Three padded
+    ``all_to_all`` phases over the 1D device axis realize the three cut-net
+    families of the fine hypergraph partition:
+
+    1. A-expand: each device receives the foreign A nonzeros its
+       multiplications read (slot table ``[owned | received | zero]``);
+    2. B-expand: same for B;
+    3. local compute: the device's multiplication list is two gathers, an
+       elementwise product, and a segment-add into its produced-partial-C
+       table — exactly its multiplication vertices, no more;
+    4. C-reduce: foreign partials ship to each C nonzero's owner and fold
+       into the owned-C table; partials the producer already owns fold
+       locally through ``prod_to_owned``.
+
+    Returns device-major owned-C slot values (p, C_max + 1); the trailing
+    slot per device is the padding sink.  Use ``unpack_fine_result``.
+    """
+    import scipy.sparse as sp
+
+    p = plan.p
+    if mesh.devices.size != p:
+        raise ValueError(f"plan is for p={p} but mesh has {mesh.devices.size} devices")
+    a_csr = sp.csr_matrix(np.asarray(a_dense))
+    b_csr = sp.csr_matrix(np.asarray(b_dense))
+    for m in (a_csr, b_csr):
+        m.sum_duplicates()
+        m.sort_indices()
+    if a_csr.nnz != len(plan.a_part) or b_csr.nnz != len(plan.b_part):
+        raise ValueError("plan was built for a different nonzero structure")
+    route_a = plan.routes["expand_a"]
+    route_b = plan.routes["expand_b"]
+    route_r = plan.routes["reduce_c"]
+    T_a, T_b, T_r = route_a.T, route_b.T, route_r.T
+    R_max = plan.local_ids["c_prod"].shape[1]
+    C_max = plan.local_ids["c_nz"].shape[1]
+    dtype = np.promote_types(a_csr.dtype, b_csr.dtype)
+
+    def pack(vals, local_ids):
+        out = np.zeros((p, local_ids.shape[1]), dtype)
+        dev, slot = np.nonzero(local_ids >= 0)
+        out[dev, slot] = vals[local_ids[dev, slot]]
+        return out
+
+    a_own = pack(a_csr.data, plan.local_ids["a_nz"])
+    b_own = pack(b_csr.data, plan.local_ids["b_nz"])
+
+    def expand(own, send_idx_blk, T):
+        # own: (N_max,); ship my cut-net scalars, receive the foreign ones
+        buf = _take0(own, send_idx_blk.reshape(-1)).reshape(p, T)
+        recv = jax.lax.all_to_all(
+            buf[None], axis, split_axis=1, concat_axis=1, tiled=False
+        )[0]
+        zero = jnp.zeros((1,), own.dtype)
+        return jnp.concatenate([own, recv.reshape(p * T), zero], 0)
+
+    def step(a_blk, b_blk, sa, sb, sr, pa, pb, pc, recv_slot_all, prod_own):
+        a_tab = expand(a_blk[0], sa[0], T_a)
+        b_tab = expand(b_blk[0], sb[0], T_b)
+        # local compute: exactly this device's multiplication vertices
+        prods = a_tab[pa[0]] * b_tab[pb[0]]
+        partial = jnp.zeros((R_max + 1,), a_tab.dtype).at[pc[0]].add(prods)
+        # reduce phase: ship foreign partials to their C owners
+        buf = _take0(partial, sr[0].reshape(-1)).reshape(p, T_r)
+        recv = jax.lax.all_to_all(
+            buf[None], axis, split_axis=1, concat_axis=1, tiled=False
+        )[0]
+        me = jax.lax.axis_index(axis)
+        slots = recv_slot_all[:, me].reshape(-1)  # owned-C slot per arrival
+        ok = slots >= 0
+        c = jnp.zeros((C_max + 1,), a_tab.dtype)
+        c = c.at[jnp.where(ok, slots, C_max)].add(
+            jnp.where(ok, recv.reshape(-1), 0)
+        )
+        # partials this device both produced and owns fold locally
+        own_map = prod_own[0]
+        okp = own_map >= 0
+        c = c.at[jnp.where(okp, own_map, C_max)].add(
+            jnp.where(okp, partial[:R_max], 0)
+        )
+        return c[None]
+
+    shard = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(axis),) * 8 + (P(), P(axis)),
+        out_specs=P(axis),
+    )
+    return shard(
+        jnp.asarray(a_own),
+        jnp.asarray(b_own),
+        jnp.asarray(route_a.send_idx),
+        jnp.asarray(route_b.send_idx),
+        jnp.asarray(route_r.send_idx),
+        jnp.asarray(plan.compute["pair_a"]),
+        jnp.asarray(plan.compute["pair_b"]),
+        jnp.asarray(plan.compute["pair_c"]),
+        jnp.asarray(plan.compute["reduce_recv_slot"]),
+        jnp.asarray(plan.compute["prod_to_owned"]),
+    )
+
+
+def unpack_fine_result(
+    c_local: jnp.ndarray,
+    plan: FinePlan,
+    c_structure,
+    shape: tuple[int, int],
+) -> np.ndarray:
+    """Scatter device-major owned-C slot values back to a dense array."""
+    c_np = np.asarray(c_local)
+    crow, ccol = c_structure.coo()
+    out = np.zeros(shape, dtype=c_np.dtype)
+    local_c = plan.local_ids["c_nz"]
+    dev, slot = np.nonzero(local_c >= 0)
+    gids = local_c[dev, slot]
+    out[crow[gids], ccol[gids]] = c_np[dev, slot]
+    return out

@@ -24,13 +24,18 @@ from repro.core import SpGEMMInstance, build_model, partition  # noqa: E402
 from repro.distributed import (  # noqa: E402
     build_outer_plan,
     build_rowwise_plan,
+    fine_spgemm,
     monoC_spgemm,
     outer_product_spgemm,
     rowwise_spgemm,
     spsumma,
 )
-from repro.distributed.plan_ir import plan_monoC_from_dense  # noqa: E402
+from repro.distributed.plan_ir import (  # noqa: E402
+    plan_fine_from_dense,
+    plan_monoC_from_dense,
+)
 from repro.distributed.spgemm_exec import (  # noqa: E402
+    unpack_fine_result,
     unpack_monoC_result,
     unpack_rowwise_result,
 )
@@ -180,6 +185,102 @@ def case_monoC_identity_partition():
     c = unpack_monoC_result(c_local, plan, inst.c, (gr * block, gc * block))[:16, :16]
     np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
     print("OK monoC_identity")
+
+
+def _fine_oracle(seed: int, shape: tuple[int, int, int], density: float, include_nz=False):
+    """Build a fine-grained plan, execute expand-expand-reduce on a 1D mesh
+    over all devices, check vs dense A @ B, and check that the planned words
+    equal the fine hypergraph's connectivity cost (predicted == planned)."""
+    p = N_DEV
+    rng = np.random.default_rng(seed)
+    I, K, J = shape
+    a_s = random_structure(I, K, density, rng)
+    b_s = random_structure(K, J, density, rng)
+    a = _random_valued(a_s, rng)
+    b = _random_valued(b_s, rng)
+    plan, inst = plan_fine_from_dense(a, b, p, seed=seed, include_nz=include_nz)
+    from repro.core import evaluate
+
+    hg = build_model(inst, "fine", include_nz=include_nz)
+    res = partition(hg, p, eps=0.10, seed=seed)
+    # same partitioner invocation as the pipeline: predictions must line up
+    predicted = evaluate(hg, res.parts, p).connectivity
+    assert plan.comm_words_ideal == predicted, (plan.comm_words_ideal, predicted)
+    mesh = Mesh(np.array(jax.devices()), ("x",))
+    c_local = fine_spgemm(a, b, plan, mesh)
+    c = unpack_fine_result(c_local, plan, inst.c, (I, J))
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+    assert plan.comm_words_padded >= plan.comm_words_ideal
+    for route in plan.routes.values():
+        assert route.items_padded >= route.items_ideal
+    return plan
+
+
+def case_fine():
+    plan = _fine_oracle(0, (36, 28, 32), density=0.15)
+    print(
+        "OK fine p=%d ideal=%d padded=%d"
+        % (N_DEV, plan.comm_words_ideal, plan.comm_words_padded)
+    )
+
+
+def case_fine_nz():
+    plan = _fine_oracle(1, (30, 26, 24), density=0.18, include_nz=True)
+    print(
+        "OK fine_nz p=%d ideal=%d padded=%d"
+        % (N_DEV, plan.comm_words_ideal, plan.comm_words_padded)
+    )
+
+
+def case_fine_identity_partition():
+    """All multiplications and nonzeros on device 0: zero traffic on all
+    three routes, result still correct."""
+    rng = np.random.default_rng(2)
+    a_s = random_structure(16, 12, 0.3, rng)
+    b_s = random_structure(12, 16, 0.3, rng)
+    a = _random_valued(a_s, rng)
+    b = _random_valued(b_s, rng)
+    from repro.distributed import build_fine_plan
+
+    inst = SpGEMMInstance(a_s, b_s)
+    zeros = np.zeros(inst.n_mult, dtype=np.int64)
+    plan = build_fine_plan(
+        inst,
+        zeros,
+        N_DEV,
+        a_part=np.zeros(inst.a.nnz, dtype=np.int64),
+        b_part=np.zeros(inst.b.nnz, dtype=np.int64),
+        c_part=np.zeros(inst.c.nnz, dtype=np.int64),
+    )
+    assert plan.comm_words_ideal == 0
+    mesh = Mesh(np.array(jax.devices()), ("x",))
+    c_local = fine_spgemm(a, b, plan, mesh)
+    c = unpack_fine_result(c_local, plan, inst.c, (16, 16))
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+    print("OK fine_identity")
+
+
+def case_select():
+    """End-to-end model selection: sweep every model on a small instance,
+    execute the plans that have executors, measured == predicted for the
+    replicated-free (fine, monoC) plans."""
+    from repro.distributed.select import sweep_instance
+
+    rng = np.random.default_rng(4)
+    a_s = random_structure(32, 24, 0.15, rng)
+    b_s = random_structure(24, 28, 0.18, rng)
+    inst = SpGEMMInstance(a_s, b_s, name="select_case")
+    a = _random_valued(a_s, rng)
+    b = _random_valued(b_s, rng)
+    recs = sweep_instance(inst, p=N_DEV, a_dense=a, b_dense=b, execute=True)
+    by_model = {r["model"]: r for r in recs}
+    for model in ("fine", "monoC"):
+        r = by_model[model]
+        assert r["measured_words"] == r["predicted_words"], (model, r)
+        assert r.get("exec_max_err", 1.0) < 1e-4, (model, r)
+    assert by_model["rowwise"].get("exec_max_err", 1.0) < 1e-4
+    best = min(by_model.values(), key=lambda r: r["predicted_words"])
+    print("OK select best=%s predicted=%d" % (best["model"], best["predicted_words"]))
 
 
 def case_compressed_psum():

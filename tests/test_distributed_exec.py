@@ -44,6 +44,25 @@ def test_monoC_identity_partition_has_zero_traffic():
     assert "OK monoC_identity" in _run("monoC_identity_partition")
 
 
+@pytest.mark.parametrize("devices", [4, 8])
+@pytest.mark.parametrize("case", ["fine", "fine_nz"])
+def test_fine_spgemm_matches_dense_oracle(case, devices):
+    """3D fine-grained executor == A @ B at p in {4, 8}, with the planned
+    words pinned to the fine hypergraph's connectivity cost."""
+    assert f"OK {case} p={devices}" in _run(case, devices=devices)
+
+
+def test_fine_identity_partition_has_zero_traffic():
+    assert "OK fine_identity" in _run("fine_identity_partition")
+
+
+@pytest.mark.parametrize("devices", [4, 8])
+def test_model_selection_sweep_end_to_end(devices):
+    """sweep_instance: all models partitioned, executors run, and measured
+    == predicted words for the replicated-free (fine, monoC) plans."""
+    assert "OK select best=" in _run("select", devices=devices)
+
+
 def test_compressed_psum_error_feedback():
     assert "OK compressed_psum" in _run("compressed_psum")
 
