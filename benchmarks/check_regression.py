@@ -27,8 +27,15 @@ import time
 import numpy as np
 
 BASELINE_DIR = os.path.join("experiments", "baselines")
-SUITES = ("partition", "plan")
-MIN_US = {"partition": 5_000, "plan": 2_500}
+SUITES = ("partition", "plan", "exec")
+MIN_US = {"partition": 5_000, "plan": 2_500, "exec": 1_000}
+# per-suite slowdown allowance overriding the CLI/global default: exec cells
+# time multi-host-device collectives whose scheduling jitter is far above
+# the numpy suites' (2-3x between runs on a contended machine), while the
+# regression they guard against — steady state falling back to the
+# rebuild/retrace path — is a 30-170x cliff.  A 3x gate is immune to the
+# jitter and still catches that cliff instantly.
+TOLERANCE = {"exec": 2.0}
 
 
 def _suite_records(suite: str) -> list[dict]:
@@ -43,6 +50,12 @@ def _suite_records(suite: str) -> list[dict]:
         # under the noise floor, leaving the gate vacuous; at 10k rows the
         # vectorized cells are 4-10ms and the whole suite still runs in ~6s
         return run(out_dir=None, quick=False)
+    if suite == "exec":
+        # steady-state executor cells (needs forced host devices >= 4, the
+        # multidev CI job; single-device runs emit only skip cells)
+        from benchmarks.bench_exec import run
+
+        return run(out_dir=None, quick=True)
     raise ValueError(f"unknown suite {suite!r}; choose from {SUITES}")
 
 
@@ -102,11 +115,12 @@ def check(suite: str, tolerance: float, min_us: int, cur_cal: int) -> list[str]:
     for rec in records:
         if rec.get("status") != "ok" or rec["name"] not in base_by_name:
             continue
-        if "exec" in rec["name"] or "/loop" in rec["name"]:
-            # executor cells time XLA jit compiles and the retained loop
-            # references are single-repeat Python loops — both far too
-            # variable for a 25% gate.  The gate guards the production
-            # (flat/vec) paths; correctness of the rest is pinned by tests.
+        if suite != "exec" and ("exec" in rec["name"] or "/loop" in rec["name"]):
+            # in the partition/plan suites, executor cells time XLA jit
+            # compiles and the retained loop references are single-repeat
+            # Python loops — both far too variable for a 25% gate.  The
+            # exec suite's own cells are steady-state means (compiles
+            # excluded from the timed region) and ARE gated.
             continue
         ref = base_by_name[rec["name"]]
         cur_us, base_us = rec.get("us_per_call", 0), ref.get("us_per_call", 0)
@@ -136,8 +150,9 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--tolerance",
         type=float,
-        default=float(os.environ.get("REGRESSION_TOLERANCE", "0.25")),
-        help="allowed slowdown fraction (default 0.25 = 25%%)",
+        default=None,
+        help="allowed slowdown fraction; overrides the per-suite defaults "
+        "(%s, else 0.25 = 25%%) and $REGRESSION_TOLERANCE" % (TOLERANCE,),
     )
     ap.add_argument(
         "--min-us",
@@ -155,10 +170,18 @@ def main(argv=None) -> None:
         for s in suites:
             update(s, calibration_us)
         return
+    env_tol = os.environ.get("REGRESSION_TOLERANCE")
     failures = []
     for s in suites:
         min_us = args.min_us if args.min_us is not None else MIN_US[s]
-        failures += check(s, args.tolerance, min_us, calibration_us)
+        # precedence: explicit --tolerance > env > per-suite default > 0.25
+        if args.tolerance is not None:
+            tolerance = args.tolerance
+        elif env_tol is not None:
+            tolerance = float(env_tol)
+        else:
+            tolerance = TOLERANCE.get(s, 0.25)
+        failures += check(s, tolerance, min_us, calibration_us)
     if failures:
         print("\nREGRESSIONS:\n  " + "\n  ".join(failures))
         sys.exit(1)

@@ -11,8 +11,9 @@ from __future__ import annotations
 import argparse
 import sys
 
-from benchmarks import bench_amg, bench_bounds, bench_kernels, bench_lp, bench_mcl, bench_tab2
-from benchmarks import bench_partition, bench_plan_build, bench_select, roofline
+from benchmarks import bench_amg, bench_bounds, bench_exec, bench_kernels, bench_lp
+from benchmarks import bench_mcl, bench_partition, bench_plan_build, bench_select
+from benchmarks import bench_tab2, roofline
 from benchmarks.common import csv_lines
 
 SUITES = {
@@ -25,6 +26,7 @@ SUITES = {
     "plan": bench_plan_build.run,
     "partition": bench_partition.run,
     "select": bench_select.run,
+    "exec": bench_exec.run,
     "roofline": roofline.run,
 }
 

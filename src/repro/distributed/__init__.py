@@ -16,6 +16,7 @@ from repro.distributed.plan_ir import (
     plan_monoC_from_dense,
 )
 from repro.distributed.plan import build_rowwise_plan_loop
+from repro.distributed.runtime import CompiledSpGEMM, compile_spgemm
 from repro.distributed.spgemm_exec import (
     fine_spgemm,
     monoC_spgemm,
@@ -25,6 +26,8 @@ from repro.distributed.spgemm_exec import (
 )
 
 __all__ = [
+    "CompiledSpGEMM",
+    "compile_spgemm",
     "ExecutionPlan",
     "Route",
     "RowwisePlan",

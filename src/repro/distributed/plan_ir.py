@@ -723,8 +723,8 @@ def build_fine_plan(
 
 
 def plan_fine_from_dense(
-    a_dense: np.ndarray,
-    b_dense: np.ndarray,
+    a_dense,
+    b_dense,
     p: int,
     eps: float = 0.10,
     seed: int = 0,
@@ -736,15 +736,17 @@ def plan_fine_from_dense(
     its multiplication vertices, and lowers the result to a ``FinePlan``.
     With ``include_nz`` the partitioner also places the nonzero vertices and
     those placements become the plan's ownership maps.
-    """
-    import scipy.sparse as sp
 
+    The operands may each be a dense array, a scipy sparse matrix, or a
+    ``SparseStructure`` — callers that already hold sparse structures never
+    round-trip through dense.
+    """
     from repro.core.partition import partition
     from repro.core.spgemm_models import build_model
-    from repro.sparse.structure import SparseStructure
+    from repro.sparse.structure import as_structure
 
-    a_s = SparseStructure.wrap(sp.csr_matrix(np.asarray(a_dense) != 0))
-    b_s = SparseStructure.wrap(sp.csr_matrix(np.asarray(b_dense) != 0))
+    a_s = as_structure(a_dense)
+    b_s = as_structure(b_dense)
     inst = SpGEMMInstance(a_s, b_s, name="fine")
     hg = build_model(inst, "fine", include_nz=include_nz)
     res = partition(hg, p, eps=eps, seed=seed)

@@ -26,13 +26,19 @@ These realize the paper's algorithm classes as compiled JAX programs:
 
 Every sparsity-dependent executor consumes an ``ExecutionPlan``
 (``plan_ir``): ownership maps + padded routing tables + local work lists.
-Matrix values are dense arrays at validation scale (structure handling is
-host-side; local compute at production scale goes through the BSR Pallas
-kernels in ``repro.kernels``).  Correctness oracle: plain ``A @ B``.
+
+Structure-time vs value-time split (DESIGN.md §8): each executor's math
+lives in a ``make_*_step`` builder that closes over the plan's routing
+tables and work lists as compile-time constants and returns a jit-compatible
+function over device-major *packed* operand arrays.  The dense entry points
+below are thin wrappers over ``repro.distributed.runtime.compile_spgemm``,
+which scatters nonzero value vectors into the packed layout *inside* the
+compiled program and AOT-compiles the whole executor once per
+(plan, structure, mesh, dtype, backend) — repeated same-structure calls pay
+no host packing, no route re-upload and no retracing.  Correctness oracle:
+plain ``A @ B``.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -51,31 +57,16 @@ def _take0(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(mask, rows, 0)
 
 
-def rowwise_spgemm(
-    a_dense: np.ndarray,
-    b_dense: np.ndarray,
-    plan: RowwisePlan,
-    mesh: Mesh,
-    axis: str = "x",
-) -> jnp.ndarray:
-    """Sparsity-dependent 1D row-wise SpGEMM.  Returns C rows in plan order
-    (device-major: C[d, r] = row ``plan.local_rows[d, r]``)."""
-    p = plan.p
-    I, K = a_dense.shape
-    _, J = b_dense.shape
+# ---------------------------------------------------------------------------
+# 1D row-wise (Ex. 5.1)
+# ---------------------------------------------------------------------------
+def make_rowwise_step(plan: RowwisePlan, mesh: Mesh, K: int, J: int, axis: str = "x"):
+    """Jit-compatible row-wise executor core.
 
-    # host-side packing (inspector output -> device-major arrays)
-    a_local = np.zeros((p, plan.local_rows.shape[1], K), a_dense.dtype)
-    for d in range(p):
-        rows = plan.local_rows[d]
-        valid = rows >= 0
-        a_local[d, valid] = a_dense[rows[valid]]
-    b_local = np.zeros((p, plan.local_b_rows.shape[1], J), b_dense.dtype)
-    for d in range(p):
-        rows = plan.local_b_rows[d]
-        valid = rows >= 0
-        b_local[d, valid] = b_dense[rows[valid]]
-
+    Returns ``fn(a_local, b_local) -> c_local`` over device-major packed row
+    tables (``a_local``: (p, I_max, K); ``b_local``: (p, K_max, J)); the
+    plan's route tables enter as compile-time constants, uploaded once.
+    """
     send_idx = jnp.asarray(plan.send_idx)  # (p, p, T)
     recv_key = jnp.asarray(plan.recv_key)  # (p, p, T)
     local_b_rows = jnp.asarray(plan.local_b_rows)  # (p, K_max)
@@ -116,24 +107,87 @@ def rowwise_spgemm(
         in_specs=(P(axis), P(axis), P(axis), P(), P(axis)),
         out_specs=P(axis),
     )
-    c_local = shard(
-        jnp.asarray(a_local),
-        jnp.asarray(b_local),
-        send_idx,
-        recv_key,
-        local_b_rows,
+
+    def fn(a_local, b_local):
+        return shard(a_local, b_local, send_idx, recv_key, local_b_rows)
+
+    return fn
+
+
+def _dense_call_1d(plan, a_dense, b_dense, mesh: Mesh, axis: str) -> jnp.ndarray:
+    """Shared dense entry for the 1D executors: derive structures, hit the
+    runtime cache, and feed the nonzero values through the AOT executable."""
+    from repro.distributed.runtime import compile_spgemm
+    from repro.sparse.structure import from_dense
+
+    a_dense = np.asarray(a_dense)
+    b_dense = np.asarray(b_dense)
+    a_s, b_s = from_dense(a_dense), from_dense(b_dense)
+    exe = compile_spgemm(
+        plan,
+        a_s,
+        b_s,
+        mesh,
+        dtype=np.promote_types(a_dense.dtype, b_dense.dtype),
+        axis=axis,
     )
-    return c_local  # (p, I_max, J)
+    ar, ac = a_s.coo()
+    br, bc = b_s.coo()
+    return exe(a_dense[ar, ac], b_dense[br, bc])
+
+
+def rowwise_spgemm(
+    a_dense: np.ndarray,
+    b_dense: np.ndarray,
+    plan: RowwisePlan,
+    mesh: Mesh,
+    axis: str = "x",
+) -> jnp.ndarray:
+    """Sparsity-dependent 1D row-wise SpGEMM.  Returns C rows in plan order
+    (device-major: C[d, r] = row ``plan.local_rows[d, r]``).
+
+    Thin wrapper over the compile-once runtime: repeated calls with the same
+    sparsity structure hit the cached AOT executable.
+    """
+    return _dense_call_1d(plan, a_dense, b_dense, mesh, axis)
 
 
 def unpack_rowwise_result(c_local: jnp.ndarray, plan: RowwisePlan, I: int) -> np.ndarray:
-    out = np.zeros((I, c_local.shape[-1]), dtype=np.asarray(c_local).dtype)
     c_np = np.asarray(c_local)
-    for d in range(plan.p):
-        rows = plan.local_rows[d]
-        valid = rows >= 0
-        out[rows[valid]] = c_np[d, valid]
+    out = np.zeros((I, c_np.shape[-1]), dtype=c_np.dtype)
+    dev, slot = np.nonzero(plan.local_rows >= 0)
+    out[plan.local_rows[dev, slot]] = c_np[dev, slot]
     return out
+
+
+# ---------------------------------------------------------------------------
+# 1D outer-product (Ex. 5.2)
+# ---------------------------------------------------------------------------
+def make_outer_step(plan: OuterPlan, mesh: Mesh, I: int, J: int, axis: str = "x"):
+    """Jit-compatible outer-product executor core.
+
+    Returns ``fn(a_cols, b_rows) -> c_shards`` over device-major packed
+    operand tables (``a_cols``: (p, I, K_max); ``b_rows``: (p, K_max, J)).
+    """
+    p = plan.p
+    I_pad = (I + p - 1) // p * p
+
+    def step(a_blk, b_blk):
+        # a_blk: (1, I, K_max); b_blk: (1, K_max, J)
+        partial_c = a_blk[0] @ b_blk[0]  # (I, J) partial sum
+        partial_c = jnp.pad(partial_c, ((0, I_pad - I), (0, 0)))
+        # fold phase: reduce-scatter C row blocks
+        mine = jax.lax.psum_scatter(
+            partial_c.reshape(p, I_pad // p, J), axis, scatter_dimension=0, tiled=False
+        )
+        return mine[None]
+
+    return shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(axis),
+    )
 
 
 def outer_product_spgemm(
@@ -146,39 +200,10 @@ def outer_product_spgemm(
     """1D outer-product SpGEMM: device d computes sum_{k in K_d} a_:k b_k:,
     fold phase reduces partial C over devices, scattering C row blocks.
 
-    Returns C sharded by row blocks of size ceil(I/p) (device-major).
+    Returns C sharded by row blocks of size ceil(I/p) (device-major).  Thin
+    wrapper over the compile-once runtime (see ``rowwise_spgemm``).
     """
-    p = plan.p
-    I, K = a_dense.shape
-    _, J = b_dense.shape
-    K_max = plan.local_ks.shape[1]
-    I_pad = (I + p - 1) // p * p
-
-    a_cols = np.zeros((p, I, K_max), a_dense.dtype)
-    b_rows = np.zeros((p, K_max, J), b_dense.dtype)
-    for d in range(p):
-        ks = plan.local_ks[d]
-        valid = ks >= 0
-        a_cols[d, :, valid] = a_dense[:, ks[valid]].T
-        b_rows[d, valid] = b_dense[ks[valid]]
-
-    def step(a_blk, b_blk):
-        # a_blk: (1, I, K_max); b_blk: (1, K_max, J)
-        partial_c = a_blk[0] @ b_blk[0]  # (I, J) partial sum
-        partial_c = jnp.pad(partial_c, ((0, I_pad - I), (0, 0)))
-        # fold phase: reduce-scatter C row blocks
-        mine = jax.lax.psum_scatter(
-            partial_c.reshape(p, I_pad // p, J), axis, scatter_dimension=0, tiled=False
-        )
-        return mine[None]
-
-    shard = shard_map(
-        step,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis)),
-        out_specs=P(axis),
-    )
-    return shard(jnp.asarray(a_cols), jnp.asarray(b_rows))  # (p, I_pad//p, J)
+    return _dense_call_1d(plan, a_dense, b_dense, mesh, axis)
 
 
 def spsumma(
@@ -220,6 +245,67 @@ def spsumma(
     return out[:I, :J]
 
 
+# ---------------------------------------------------------------------------
+# 2D monochrome-C (Ex. 5.4)
+# ---------------------------------------------------------------------------
+def make_monoC_step(
+    plan: MonoCPlan,
+    mesh: Mesh,
+    block: int = 8,
+    backend: str | None = None,
+    axes: tuple[str, str] = ("x", "y"),
+):
+    """Jit-compatible monochrome-C executor core.
+
+    Returns ``fn(a_own, b_own) -> c_local`` over device-major packed block
+    tables ((p, N_max, b, b)); route tables and BSR pair lists enter as
+    compile-time constants.
+    """
+    from repro.kernels.bsr_spgemm import bsr_spgemm_local
+
+    p = plan.p
+    route_a, route_b = plan.routes["expand_a"], plan.routes["expand_b"]
+    T_a, T_b = route_a.T, route_b.T
+    n_c_slots = plan.n_c_slots
+    sa = jnp.asarray(route_a.send_idx)
+    sb = jnp.asarray(route_b.send_idx)
+    pa = jnp.asarray(plan.compute["pair_a"], jnp.int32)
+    pb = jnp.asarray(plan.compute["pair_b"], jnp.int32)
+    pc = jnp.asarray(plan.compute["pair_c"], jnp.int32)
+
+    def expand(own, send_idx_blk, T):
+        # own: (N_max, b, b); send_idx_blk: (p, T) local slots to ship
+        buf = _take0(own, send_idx_blk.reshape(-1)).reshape(p, T, block, block)
+        # THE cut-net traffic of this operand: one all_to_all over the
+        # flattened 2D mesh
+        recv = jax.lax.all_to_all(
+            buf[None], axes, split_axis=1, concat_axis=1, tiled=False
+        )[0]
+        zero = jnp.zeros((1, block, block), own.dtype)
+        return jnp.concatenate([own, recv.reshape(p * T, block, block), zero], 0)
+
+    def step(a_blk, b_blk, sa_, sb_, pa_, pb_, pc_):
+        a_tab = expand(a_blk[0], sa_[0], T_a)
+        b_tab = expand(b_blk[0], sb_[0], T_b)
+        c = bsr_spgemm_local(
+            a_tab, b_tab, pa_[0], pb_[0], pc_[0], n_c_blocks=n_c_slots, backend=backend
+        )
+        return c[None]
+
+    spec = P(axes)
+    shard = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(spec,) * 7,
+        out_specs=spec,
+    )
+
+    def fn(a_own, b_own):
+        return shard(a_own, b_own, sa, sb, pa, pb, pc)
+
+    return fn
+
+
 def monoC_spgemm(
     a_dense: np.ndarray,
     b_dense: np.ndarray,
@@ -241,66 +327,29 @@ def monoC_spgemm(
     ``[owned | received | zero]``.
 
     Returns device-major C block shards (p, C_max + 1, b, b); the trailing
-    slot per device is the padding sink.  Use ``unpack_monoC_result``.
+    slot per device is the padding sink.  Use ``unpack_monoC_result``.  Thin
+    wrapper over the compile-once runtime: the tiling here is the only
+    per-call structure work, and same-structure calls hit the cached AOT
+    executable.
     """
-    from repro.kernels.bsr_spgemm import bsr_spgemm_local
+    from repro.distributed.runtime import compile_spgemm
     from repro.sparse.bsr import to_bsr
 
-    p = plan.p
-    if mesh.devices.size != p:
-        raise ValueError(f"plan is for p={p} but mesh has {mesh.devices.size} devices")
-    ab = to_bsr(a_dense, block, block)
-    bb = to_bsr(b_dense, block, block)
+    ab = to_bsr(np.asarray(a_dense), block, block)
+    bb = to_bsr(np.asarray(b_dense), block, block)
     if len(plan.a_part) != ab.n_blocks or len(plan.b_part) != bb.n_blocks:
         raise ValueError("plan was built for a different block structure")
-    route_a, route_b = plan.routes["expand_a"], plan.routes["expand_b"]
-    T_a, T_b = route_a.T, route_b.T
-    n_c_slots = plan.n_c_slots
-
-    def pack(blocks, local_ids):
-        out = np.zeros((p, local_ids.shape[1], block, block), blocks.dtype)
-        dev, slot = np.nonzero(local_ids >= 0)
-        out[dev, slot] = blocks[local_ids[dev, slot]]
-        return out
-
-    a_own = pack(ab.blocks, plan.local_ids["a_nz"])
-    b_own = pack(bb.blocks, plan.local_ids["b_nz"])
-
-    def expand(own, send_idx_blk, T):
-        # own: (N_max, b, b); send_idx_blk: (p, T) local slots to ship
-        buf = _take0(own, send_idx_blk.reshape(-1)).reshape(p, T, block, block)
-        # THE cut-net traffic of this operand: one all_to_all over the
-        # flattened 2D mesh
-        recv = jax.lax.all_to_all(
-            buf[None], axes, split_axis=1, concat_axis=1, tiled=False
-        )[0]
-        zero = jnp.zeros((1, block, block), own.dtype)
-        return jnp.concatenate([own, recv.reshape(p * T, block, block), zero], 0)
-
-    def step(a_blk, b_blk, sa, sb, pa, pb, pc):
-        a_tab = expand(a_blk[0], sa[0], T_a)
-        b_tab = expand(b_blk[0], sb[0], T_b)
-        c = bsr_spgemm_local(
-            a_tab, b_tab, pa[0], pb[0], pc[0], n_c_blocks=n_c_slots, backend=backend
-        )
-        return c[None]
-
-    spec = P(axes)
-    shard = shard_map(
-        step,
-        mesh=mesh,
-        in_specs=(spec,) * 7,
-        out_specs=spec,
+    exe = compile_spgemm(
+        plan,
+        ab.block_structure(),
+        bb.block_structure(),
+        mesh,
+        dtype=np.promote_types(ab.blocks.dtype, bb.blocks.dtype),
+        backend=backend,
+        block=block,
+        axes=axes,
     )
-    return shard(
-        jnp.asarray(a_own),
-        jnp.asarray(b_own),
-        jnp.asarray(route_a.send_idx),
-        jnp.asarray(route_b.send_idx),
-        jnp.asarray(plan.compute["pair_a"], jnp.int32),
-        jnp.asarray(plan.compute["pair_b"], jnp.int32),
-        jnp.asarray(plan.compute["pair_c"], jnp.int32),
-    )
+    return exe(ab.blocks, bb.blocks)
 
 
 def unpack_monoC_result(
@@ -326,9 +375,83 @@ def unpack_monoC_result(
     return out.transpose(0, 2, 1, 3).reshape(shape)
 
 
+# ---------------------------------------------------------------------------
+# 3D fine-grained (Def. 3.1)
+# ---------------------------------------------------------------------------
+def make_fine_step(plan: FinePlan, mesh: Mesh, axis: str = "x"):
+    """Jit-compatible fine-grained executor core (expand-expand-reduce).
+
+    Returns ``fn(a_own, b_own) -> c_local`` over device-major packed scalar
+    slot tables ((p, N_max)); all three route tables, the multiplication
+    lists and the reduce/fold maps enter as compile-time constants.
+    """
+    p = plan.p
+    route_a = plan.routes["expand_a"]
+    route_b = plan.routes["expand_b"]
+    route_r = plan.routes["reduce_c"]
+    T_a, T_b, T_r = route_a.T, route_b.T, route_r.T
+    R_max = plan.local_ids["c_prod"].shape[1]
+    C_max = plan.local_ids["c_nz"].shape[1]
+    sa = jnp.asarray(route_a.send_idx)
+    sb = jnp.asarray(route_b.send_idx)
+    sr = jnp.asarray(route_r.send_idx)
+    pa = jnp.asarray(plan.compute["pair_a"])
+    pb = jnp.asarray(plan.compute["pair_b"])
+    pc = jnp.asarray(plan.compute["pair_c"])
+    recv_slot = jnp.asarray(plan.compute["reduce_recv_slot"])
+    prod_own = jnp.asarray(plan.compute["prod_to_owned"])
+
+    def expand(own, send_idx_blk, T):
+        # own: (N_max,); ship my cut-net scalars, receive the foreign ones
+        buf = _take0(own, send_idx_blk.reshape(-1)).reshape(p, T)
+        recv = jax.lax.all_to_all(
+            buf[None], axis, split_axis=1, concat_axis=1, tiled=False
+        )[0]
+        zero = jnp.zeros((1,), own.dtype)
+        return jnp.concatenate([own, recv.reshape(p * T), zero], 0)
+
+    def step(a_blk, b_blk, sa_, sb_, sr_, pa_, pb_, pc_, recv_slot_all, prod_own_):
+        a_tab = expand(a_blk[0], sa_[0], T_a)
+        b_tab = expand(b_blk[0], sb_[0], T_b)
+        # local compute: exactly this device's multiplication vertices
+        prods = a_tab[pa_[0]] * b_tab[pb_[0]]
+        partial = jnp.zeros((R_max + 1,), a_tab.dtype).at[pc_[0]].add(prods)
+        # reduce phase: ship foreign partials to their C owners
+        buf = _take0(partial, sr_[0].reshape(-1)).reshape(p, T_r)
+        recv = jax.lax.all_to_all(
+            buf[None], axis, split_axis=1, concat_axis=1, tiled=False
+        )[0]
+        me = jax.lax.axis_index(axis)
+        slots = recv_slot_all[:, me].reshape(-1)  # owned-C slot per arrival
+        ok = slots >= 0
+        c = jnp.zeros((C_max + 1,), a_tab.dtype)
+        c = c.at[jnp.where(ok, slots, C_max)].add(
+            jnp.where(ok, recv.reshape(-1), 0)
+        )
+        # partials this device both produced and owns fold locally
+        own_map = prod_own_[0]
+        okp = own_map >= 0
+        c = c.at[jnp.where(okp, own_map, C_max)].add(
+            jnp.where(okp, partial[:R_max], 0)
+        )
+        return c[None]
+
+    shard = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(axis),) * 8 + (P(), P(axis)),
+        out_specs=P(axis),
+    )
+
+    def fn(a_own, b_own):
+        return shard(a_own, b_own, sa, sb, sr, pa, pb, pc, recv_slot, prod_own)
+
+    return fn
+
+
 def fine_spgemm(
-    a_dense: np.ndarray,
-    b_dense: np.ndarray,
+    a,
+    b,
     plan: FinePlan,
     mesh: Mesh,
     axis: str = "x",
@@ -350,91 +473,27 @@ def fine_spgemm(
        into the owned-C table; partials the producer already owns fold
        locally through ``prod_to_owned``.
 
-    Returns device-major owned-C slot values (p, C_max + 1); the trailing
-    slot per device is the padding sink.  Use ``unpack_fine_result``.
+    ``a`` / ``b`` may each be a dense array, a scipy sparse matrix, or an
+    ``(SparseStructure, values)`` pair — callers that already hold sparse
+    operands never densify.  Returns device-major owned-C slot values
+    (p, C_max + 1); the trailing slot per device is the padding sink.  Use
+    ``unpack_fine_result``.  Thin wrapper over the compile-once runtime.
     """
-    import scipy.sparse as sp
+    from repro.distributed.runtime import compile_spgemm, structure_and_values
 
-    p = plan.p
-    if mesh.devices.size != p:
-        raise ValueError(f"plan is for p={p} but mesh has {mesh.devices.size} devices")
-    a_csr = sp.csr_matrix(np.asarray(a_dense))
-    b_csr = sp.csr_matrix(np.asarray(b_dense))
-    for m in (a_csr, b_csr):
-        m.sum_duplicates()
-        m.sort_indices()
-    if a_csr.nnz != len(plan.a_part) or b_csr.nnz != len(plan.b_part):
+    a_s, a_vals = structure_and_values(a)
+    b_s, b_vals = structure_and_values(b)
+    if a_s.nnz != len(plan.a_part) or b_s.nnz != len(plan.b_part):
         raise ValueError("plan was built for a different nonzero structure")
-    route_a = plan.routes["expand_a"]
-    route_b = plan.routes["expand_b"]
-    route_r = plan.routes["reduce_c"]
-    T_a, T_b, T_r = route_a.T, route_b.T, route_r.T
-    R_max = plan.local_ids["c_prod"].shape[1]
-    C_max = plan.local_ids["c_nz"].shape[1]
-    dtype = np.promote_types(a_csr.dtype, b_csr.dtype)
-
-    def pack(vals, local_ids):
-        out = np.zeros((p, local_ids.shape[1]), dtype)
-        dev, slot = np.nonzero(local_ids >= 0)
-        out[dev, slot] = vals[local_ids[dev, slot]]
-        return out
-
-    a_own = pack(a_csr.data, plan.local_ids["a_nz"])
-    b_own = pack(b_csr.data, plan.local_ids["b_nz"])
-
-    def expand(own, send_idx_blk, T):
-        # own: (N_max,); ship my cut-net scalars, receive the foreign ones
-        buf = _take0(own, send_idx_blk.reshape(-1)).reshape(p, T)
-        recv = jax.lax.all_to_all(
-            buf[None], axis, split_axis=1, concat_axis=1, tiled=False
-        )[0]
-        zero = jnp.zeros((1,), own.dtype)
-        return jnp.concatenate([own, recv.reshape(p * T), zero], 0)
-
-    def step(a_blk, b_blk, sa, sb, sr, pa, pb, pc, recv_slot_all, prod_own):
-        a_tab = expand(a_blk[0], sa[0], T_a)
-        b_tab = expand(b_blk[0], sb[0], T_b)
-        # local compute: exactly this device's multiplication vertices
-        prods = a_tab[pa[0]] * b_tab[pb[0]]
-        partial = jnp.zeros((R_max + 1,), a_tab.dtype).at[pc[0]].add(prods)
-        # reduce phase: ship foreign partials to their C owners
-        buf = _take0(partial, sr[0].reshape(-1)).reshape(p, T_r)
-        recv = jax.lax.all_to_all(
-            buf[None], axis, split_axis=1, concat_axis=1, tiled=False
-        )[0]
-        me = jax.lax.axis_index(axis)
-        slots = recv_slot_all[:, me].reshape(-1)  # owned-C slot per arrival
-        ok = slots >= 0
-        c = jnp.zeros((C_max + 1,), a_tab.dtype)
-        c = c.at[jnp.where(ok, slots, C_max)].add(
-            jnp.where(ok, recv.reshape(-1), 0)
-        )
-        # partials this device both produced and owns fold locally
-        own_map = prod_own[0]
-        okp = own_map >= 0
-        c = c.at[jnp.where(okp, own_map, C_max)].add(
-            jnp.where(okp, partial[:R_max], 0)
-        )
-        return c[None]
-
-    shard = shard_map(
-        step,
-        mesh=mesh,
-        in_specs=(P(axis),) * 8 + (P(), P(axis)),
-        out_specs=P(axis),
+    exe = compile_spgemm(
+        plan,
+        a_s,
+        b_s,
+        mesh,
+        dtype=np.promote_types(a_vals.dtype, b_vals.dtype),
+        axis=axis,
     )
-    return shard(
-        jnp.asarray(a_own),
-        jnp.asarray(b_own),
-        jnp.asarray(route_a.send_idx),
-        jnp.asarray(route_b.send_idx),
-        jnp.asarray(route_r.send_idx),
-        jnp.asarray(plan.compute["pair_a"]),
-        jnp.asarray(plan.compute["pair_b"]),
-        jnp.asarray(plan.compute["pair_c"]),
-        jnp.asarray(plan.compute["reduce_recv_slot"]),
-        jnp.asarray(plan.compute["prod_to_owned"]),
-    )
+    return exe(a_vals, b_vals)
 
 
 def unpack_fine_result(

@@ -78,6 +78,18 @@ def _bsr_spgemm_jit(
     return out
 
 
+def _pair_list_int32(x) -> jnp.ndarray:
+    """Cast one pair-list operand to int32, exactly once, host-side when
+    possible: the inspector emits int64, and casting inside jit meant every
+    invocation traced/ran an extra convert_element_type on the
+    scalar-prefetch path.  Host operands (ndarray / list / tuple) are cast
+    in numpy; traced operands (the shard_map executor path) pass through
+    unchanged when already int32 and get a single astype otherwise."""
+    if isinstance(x, (np.ndarray, list, tuple)):
+        return jnp.asarray(np.asarray(x, dtype=np.int32))
+    return x if x.dtype == jnp.int32 else x.astype(jnp.int32)
+
+
 def bsr_spgemm(
     a_blocks: jnp.ndarray,  # (na, bm, bk)
     b_blocks: jnp.ndarray,  # (nb, bk, bn)
@@ -88,17 +100,9 @@ def bsr_spgemm(
     interpret: bool = False,
     acc_dtype=jnp.float32,
 ) -> jnp.ndarray:
-    """Host-casts the pair lists to int32 before entering the jitted call:
-    the inspector emits int64, and casting inside jit meant every invocation
-    traced/ran an extra convert_element_type on the scalar-prefetch path.
-    Traced operands (the shard_map executor path) pass through unchanged —
-    they are already int32 there."""
-    pair_a, pair_b, pair_c = (
-        jnp.asarray(np.asarray(x, dtype=np.int32))
-        if isinstance(x, (np.ndarray, list, tuple))
-        else (x if x.dtype == jnp.int32 else x.astype(jnp.int32))
-        for x in (pair_a, pair_b, pair_c)
-    )
+    pair_a = _pair_list_int32(pair_a)
+    pair_b = _pair_list_int32(pair_b)
+    pair_c = _pair_list_int32(pair_c)
     return _bsr_spgemm_jit(
         a_blocks,
         b_blocks,

@@ -6,6 +6,7 @@ hypergraph layer needs so that `core/` never touches scipy directly.
 """
 from repro.sparse.structure import (
     SparseStructure,
+    as_structure,
     from_coo,
     from_dense,
     random_structure,
@@ -16,6 +17,7 @@ from repro.sparse.bsr import BlockSparse, to_bsr, bsr_to_dense
 
 __all__ = [
     "SparseStructure",
+    "as_structure",
     "from_coo",
     "from_dense",
     "random_structure",

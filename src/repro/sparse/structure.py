@@ -103,6 +103,16 @@ def from_dense(arr) -> SparseStructure:
     return SparseStructure.wrap(sp.csr_matrix(np.asarray(arr) != 0))
 
 
+def as_structure(x) -> SparseStructure:
+    """Normalize to a ``SparseStructure``: accepts a structure (returned
+    as-is), any scipy sparse matrix, or a dense array."""
+    if isinstance(x, SparseStructure):
+        return x
+    if sp.issparse(x):
+        return SparseStructure.wrap(sp.csr_matrix(x))
+    return from_dense(x)
+
+
 def random_structure(
     n_rows: int,
     n_cols: int,

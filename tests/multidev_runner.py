@@ -283,6 +283,88 @@ def case_select():
     print("OK select best=%s predicted=%d" % (best["model"], best["predicted_words"]))
 
 
+def case_runtime():
+    """Compile-once runtime: all four executors AOT-compiled once, value-only
+    updates match the dense oracle, zero retraces across >= 10 same-structure
+    calls, donation never corrupts caller-held numpy buffers, and the LRU
+    returns the identical executable on a same-key lookup."""
+    from repro.distributed import runtime
+    from repro.distributed.runtime import compile_spgemm
+    from repro.distributed.select import build_executable_plan
+
+    p = N_DEV
+    rng = np.random.default_rng(7)
+    a_s = random_structure(36, 30, 0.15, rng)
+    b_s = random_structure(30, 32, 0.18, rng)
+    inst = SpGEMMInstance(a_s, b_s, name="runtime_case")
+    a1, b1 = _random_valued(a_s, rng), _random_valued(b_s, rng)
+    a2, b2 = _random_valued(a_s, rng), _random_valued(b_s, rng)
+    ar, ac = a_s.coo()
+    br, bc = b_s.coo()
+
+    def vals(a_dense, b_dense, model):
+        av, bv = a_dense[ar, ac], b_dense[br, bc]
+        if model == "monoC":  # scalar instance == 1x1 blocks
+            av, bv = av.reshape(-1, 1, 1), bv.reshape(-1, 1, 1)
+        return av, bv
+
+    fine_exe = None
+    for model in ("rowwise", "outer", "monoC", "fine"):
+        hg = build_model(inst, model)
+        res = partition(hg, p, eps=0.2, seed=0)
+        plan = build_executable_plan(inst, model, res.parts, p)
+        if model == "monoC":
+            mesh = Mesh(np.array(jax.devices()[:p]).reshape(2, p // 2), ("x", "y"))
+            exe = compile_spgemm(
+                plan, inst.a, inst.b, mesh, block=1, backend="xla", c_structure=inst.c
+            )
+        else:
+            mesh = Mesh(np.array(jax.devices()[:p]), ("x",))
+            exe = compile_spgemm(plan, inst.a, inst.b, mesh, c_structure=inst.c)
+        # value-only updates: two value sets on the one compiled structure
+        for a_d, b_d in ((a1, b1), (a2, b2)):
+            got = exe.unpack(exe(*vals(a_d, b_d, model)))[:36, :32]
+            np.testing.assert_allclose(got, a_d @ b_d, rtol=1e-4, atol=1e-4)
+        # cache hit returns the identical executable object
+        assert (
+            compile_spgemm(
+                plan, inst.a, inst.b, mesh,
+                **(dict(block=1, backend="xla") if model == "monoC" else {}),
+            )
+            is exe
+        ), model
+        if model == "fine":
+            fine_exe = exe
+
+    # zero retraces across >= 10 same-structure calls
+    av, bv = vals(a1, b1, "fine")
+    n0 = runtime.trace_count()
+    for _ in range(10):
+        out = fine_exe(av, bv)
+    jax.block_until_ready(out)
+    assert runtime.trace_count() == n0, (runtime.trace_count(), n0)
+
+    # donation doesn't corrupt reuse: numpy inputs survive repeated calls
+    av_copy, bv_copy = av.copy(), bv.copy()
+    r1 = np.asarray(fine_exe(av, bv))
+    r2 = np.asarray(fine_exe(av, bv))
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(av, av_copy)
+    np.testing.assert_array_equal(bv, bv_copy)
+
+    # mismatched-structure values raise
+    try:
+        fine_exe(av[:-1], bv)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("short A values did not raise")
+
+    info = runtime.cache_info()
+    assert info["hits"] >= 4, info
+    print("OK runtime p=%d traces=%d" % (p, runtime.trace_count()))
+
+
 def case_compressed_psum():
     """EF-int8 compressed all-reduce: approximates the exact mean within the
     quantization scale, and error feedback drives the running average of the

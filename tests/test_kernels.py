@@ -75,6 +75,49 @@ def test_bsr_spgemm_matches_dense(block, shape):
     np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
 
 
+def test_bsr_spgemm_pair_list_int32_cast_covers_all_operand_kinds():
+    """The host-side int32 cast is one explicit helper: int64 ndarrays and
+    Python lists cast host-side (no convert inside jit), already-int32
+    traced operands pass through untouched, and other traced int dtypes get
+    a single astype — all three kinds produce identical results."""
+    from repro.kernels.bsr_spgemm import _pair_list_int32, bsr_spgemm
+
+    # helper semantics per operand kind
+    out = _pair_list_int32(np.array([0, 1, 2], dtype=np.int64))
+    assert out.dtype == jnp.int32
+    out = _pair_list_int32([0, 1, 2])
+    assert out.dtype == jnp.int32
+    traced32 = jnp.array([0, 1, 2], dtype=jnp.int32)
+    assert _pair_list_int32(traced32) is traced32  # no-op, no copy
+    assert _pair_list_int32(jnp.array([0, 1], dtype=jnp.int16)).dtype == jnp.int32
+
+    # end to end: the kernel result is identical through every kind
+    rng = np.random.default_rng(4)
+    block = 8
+    a = _random_block_dense(rng, 32, 16, 0.5, block)
+    b = _random_block_dense(rng, 16, 24, 0.5, block)
+    ab, bb = to_bsr(a, block, block), to_bsr(b, block, block)
+    from repro.kernels.bsr_spgemm import build_pair_lists
+
+    pa, pb, pc, crows, ccols = build_pair_lists(ab.brows, ab.bcols, bb.brows, bb.bcols)
+    n_c = len(crows)
+    want = bsr_spgemm(ab.blocks, bb.blocks, pa, pb, pc, n_c, interpret=True)
+    as_list = bsr_spgemm(
+        ab.blocks, bb.blocks, list(pa), list(pb), list(pc), n_c, interpret=True
+    )
+    as_jnp = bsr_spgemm(
+        ab.blocks,
+        bb.blocks,
+        jnp.asarray(pa, jnp.int32),
+        jnp.asarray(pb, jnp.int32),
+        jnp.asarray(pc, jnp.int32),
+        n_c,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(as_list))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(as_jnp))
+
+
 def test_bsr_spgemm_pair_list_is_tiled_hypergraph():
     """The inspector's pair list cardinality equals |V^m| of the coarsened
     (block-level) SpGEMM hypergraph."""

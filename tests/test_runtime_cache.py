@@ -1,0 +1,209 @@
+"""Compile-once runtime tests.
+
+Single-process parts run at p=1 (a 1-device mesh exercises the full scatter
+-> expand -> compute -> reduce program without forced host devices): cache
+identity, LRU bounds, fingerprints, sparse-input entry points, and the
+value-shape guard.  The multi-device oracle + retrace-counter + donation
+coverage at p in {4, 8} runs through the subprocess runner (forced host
+devices must not leak into this pytest process' jax).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUNNER = os.path.join(ROOT, "tests", "multidev_runner.py")
+
+
+def _run(case: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_DEVICES"] = str(devices)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, RUNNER, case],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("devices", [4, 8])
+def test_runtime_all_executors_value_only_oracle(devices):
+    """All four executors through CompiledSpGEMM at p in {4, 8}: value-only
+    updates == dense oracle, zero retraces across >= 10 calls, donation-safe
+    numpy reuse, cache-hit identity, mismatched-structure raise."""
+    assert f"OK runtime p={devices}" in _run("runtime", devices=devices)
+
+
+# ---------------------------------------------------------------------------
+# single-process coverage at p=1
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def tiny():
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core import SpGEMMInstance
+    from repro.distributed import build_fine_plan
+    from repro.sparse.structure import random_structure
+
+    rng = np.random.default_rng(0)
+    a_s = random_structure(12, 10, 0.3, rng)
+    b_s = random_structure(10, 11, 0.3, rng)
+    inst = SpGEMMInstance(a_s, b_s, name="tiny")
+    plan = build_fine_plan(inst, np.zeros(inst.n_mult, dtype=np.int64), 1)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    a = np.zeros(a_s.shape, np.float32)
+    b = np.zeros(b_s.shape, np.float32)
+    a[a_s.coo()] = rng.standard_normal(a_s.nnz).astype(np.float32)
+    b[b_s.coo()] = rng.standard_normal(b_s.nnz).astype(np.float32)
+    return inst, plan, mesh, a, b
+
+
+def test_all_models_match_oracle_at_p1(tiny):
+    """Every runtime lowering produces A @ B on a 1-device mesh (the
+    size-1 collectives degenerate to copies)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core import SpGEMMInstance
+    from repro.distributed.runtime import compile_spgemm
+    from repro.distributed.select import build_executable_plan
+
+    inst, _, _, a, b = tiny
+    p = 1
+    ar, ac = inst.a.coo()
+    br, bc = inst.b.coo()
+    for model in ("rowwise", "outer", "monoC", "fine"):
+        parts = {
+            "rowwise": np.zeros(inst.shape[0], np.int64),
+            "outer": np.zeros(inst.shape[1], np.int64),
+            "monoC": np.zeros(inst.c.nnz, np.int64),
+            "fine": np.zeros(inst.n_mult, np.int64),
+        }[model]
+        plan = build_executable_plan(inst, model, parts, p)
+        if model == "monoC":
+            mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("x", "y"))
+            exe = compile_spgemm(
+                plan, inst.a, inst.b, mesh, block=1, backend="xla",
+                c_structure=inst.c,
+            )
+            got = exe.unpack(exe(a[ar, ac].reshape(-1, 1, 1), b[br, bc].reshape(-1, 1, 1)))
+        else:
+            mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+            exe = compile_spgemm(plan, inst.a, inst.b, mesh, c_structure=inst.c)
+            got = exe.unpack(exe(a[ar, ac], b[br, bc]))
+        np.testing.assert_allclose(
+            got[:12, :11], a @ b, rtol=1e-5, atol=1e-5, err_msg=model
+        )
+
+
+def test_cache_hit_returns_same_executable(tiny):
+    from repro.distributed import runtime
+
+    inst, plan, mesh, _, _ = tiny
+    runtime.cache_clear()
+    exe1 = runtime.compile_spgemm(plan, inst.a, inst.b, mesh)
+    hits0 = runtime.cache_info()["hits"]
+    exe2 = runtime.compile_spgemm(plan, inst.a, inst.b, mesh)
+    assert exe2 is exe1
+    assert runtime.cache_info()["hits"] == hits0 + 1
+    # equal-content but distinct structure/plan objects still hit: the key
+    # is the content fingerprint, not object identity
+    from repro.core import SpGEMMInstance
+    from repro.distributed import build_fine_plan
+
+    inst2 = SpGEMMInstance(inst.a, inst.b)
+    plan2 = build_fine_plan(inst2, np.zeros(inst2.n_mult, dtype=np.int64), 1)
+    exe3 = runtime.compile_spgemm(plan2, inst2.a, inst2.b, mesh)
+    assert exe3 is exe1
+
+
+def test_cache_is_a_bounded_lru(tiny, monkeypatch):
+    from repro.distributed import runtime
+
+    inst, plan, mesh, _, _ = tiny
+    runtime.cache_clear()
+    monkeypatch.setattr(runtime, "CACHE_SIZE", 2)
+    exe_f32 = runtime.compile_spgemm(plan, inst.a, inst.b, mesh, dtype=np.float32)
+    runtime.compile_spgemm(plan, inst.a, inst.b, mesh, dtype=np.float16)
+    runtime.compile_spgemm(plan, inst.a, inst.b, mesh, dtype=np.int32)
+    assert runtime.cache_info()["size"] == 2
+    # float32 (least recently used) was evicted: same key now rebuilds
+    exe_again = runtime.compile_spgemm(plan, inst.a, inst.b, mesh, dtype=np.float32)
+    assert exe_again is not exe_f32
+    runtime.cache_clear()
+
+
+def test_value_shape_mismatch_raises(tiny):
+    from repro.distributed.runtime import compile_spgemm
+
+    inst, plan, mesh, a, b = tiny
+    exe = compile_spgemm(plan, inst.a, inst.b, mesh)
+    av = a[inst.a.coo()]
+    bv = b[inst.b.coo()]
+    with pytest.raises(ValueError, match="same-structure"):
+        exe(av[:-1], bv)
+    with pytest.raises(ValueError, match="same-structure"):
+        exe(av, np.concatenate([bv, bv]))
+
+
+def test_fingerprints_are_id_stable_and_content_sensitive(tiny):
+    from repro.core import SpGEMMInstance
+    from repro.distributed import build_fine_plan
+    from repro.distributed.runtime import plan_fingerprint, structure_fingerprint
+
+    inst, plan, _, _, _ = tiny
+    fp = plan_fingerprint(plan)
+    assert plan_fingerprint(plan) == fp  # memoized on the object
+    assert plan.__dict__.get("_fingerprint") == fp
+    # identical content -> identical fingerprint on a fresh object
+    plan2 = build_fine_plan(
+        SpGEMMInstance(inst.a, inst.b), np.zeros(inst.n_mult, dtype=np.int64), 1
+    )
+    assert plan_fingerprint(plan2) == fp
+    # different partition -> different fingerprint
+    other = np.zeros(inst.n_mult, dtype=np.int64)
+    plan3 = build_fine_plan(SpGEMMInstance(inst.a, inst.b), other, 2)
+    assert plan_fingerprint(plan3) != fp
+    assert structure_fingerprint(inst.a) != structure_fingerprint(inst.b)
+    assert structure_fingerprint(inst.a) == structure_fingerprint(inst.a)
+
+
+def test_fine_spgemm_accepts_sparse_operands(tiny):
+    """The dense, scipy-sparse, and (structure, values) entry points agree —
+    sparse callers never round-trip through dense."""
+    import scipy.sparse as sp
+
+    from repro.distributed import fine_spgemm
+
+    inst, plan, mesh, a, b = tiny
+    dense = np.asarray(fine_spgemm(a, b, plan, mesh))
+    sparse = np.asarray(fine_spgemm(sp.csr_matrix(a), sp.csr_matrix(b), plan, mesh))
+    pair = np.asarray(
+        fine_spgemm(
+            (inst.a, a[inst.a.coo()]), (inst.b, b[inst.b.coo()]), plan, mesh
+        )
+    )
+    np.testing.assert_allclose(sparse, dense, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(pair, dense, rtol=1e-6, atol=1e-6)
+
+
+def test_plan_fine_from_dense_accepts_structures(tiny):
+    """Structure-only planning: no dense operand materialized anywhere."""
+    from repro.distributed.plan_ir import plan_fine_from_dense
+
+    inst, _, _, a, b = tiny
+    plan_s, inst_s = plan_fine_from_dense(inst.a, inst.b, p=2)
+    plan_d, _ = plan_fine_from_dense(a, b, p=2)
+    from repro.distributed.runtime import plan_fingerprint
+
+    assert plan_fingerprint(plan_s) == plan_fingerprint(plan_d)
+    assert inst_s.a == inst.a
