@@ -20,12 +20,14 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.distributed.registry import MODEL_SPECS
+
 # replicated-free plans: every shipped item is one nonzero payload, so the
 # words on the wire (minus padding) are exactly the connectivity cost
-EXACT_MODELS = ("fine", "monoC")
+EXACT_MODELS = tuple(n for n, s in MODEL_SPECS.items() if s.measured == "exact")
 # outer's fold volume and rowwise's nnz-weighted useful words also reproduce
 # their models' predictions; asserted too, reported separately
-USEFUL_EXACT_MODELS = ("rowwise", "outer")
+USEFUL_EXACT_MODELS = tuple(n for n, s in MODEL_SPECS.items() if s.measured == "useful")
 
 
 def _instances(quick: bool):

@@ -1,11 +1,16 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds, through the one front door.
 
-Builds the Fig. 1 SpGEMM instance, constructs the fine-grained hypergraph
-(Def. 3.1) and the coarsened 1D/2D models (Sec. 5), partitions each for p=4,
-and prints the Lemma 4.2 communication costs — then runs the row-wise
-distributed executor to show the partition actually computing A@B.
+A hypergraph partition IS an SpGEMM algorithm — and ``repro.plan`` is the
+whole pipeline: model the instance, partition it, lower the cut to routing
+tables, and (when devices allow) run the partition as a compiled program.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py                  # plan + costs
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+  PYTHONPATH=src python examples/quickstart.py                  # + execution
+
+The old five-layer spelling (SpGEMMInstance -> build_model -> partition ->
+build_executable_plan -> compile_spgemm) still works for stage-by-stage
+exploration; this example is the supported surface.
 """
 import os
 import sys
@@ -14,38 +19,57 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import SpGEMMInstance, build_model, evaluate, partition, MODELS
-from repro.core.matrices import mcl_instance
-from repro.sparse import from_dense
+import repro
 
 A_FIG1 = np.array([[1, 0, 1, 0], [1, 0, 0, 1], [0, 1, 0, 0]])
 B_FIG1 = np.array([[0, 1], [1, 0], [1, 1], [0, 1]])
 
 
 def main():
-    print("== Fig. 1 instance ==")
-    inst = SpGEMMInstance(from_dense(A_FIG1), from_dense(B_FIG1), name="fig1")
+    print("== Fig. 1 instance, fine-grained model (Def. 3.1) ==")
+    fig1 = repro.plan(A_FIG1, B_FIG1, p=2, model="fine", name="fig1", include_nz=True)
+    inst = fig1.instance
     print(f"S_A nnz={inst.a.nnz}, S_B nnz={inst.b.nnz}, S_C nnz={inst.c.nnz}, "
           f"|V^m|={inst.n_mult}")
-    hg = build_model(inst, "fine", include_nz=True)
-    print(f"fine-grained hypergraph: {hg}")
+    print(f"hypergraph: {fig1.hypergraph}")
 
-    print("\n== partitioning a real instance (MCL 'dip'-like, p=4) ==")
+    print("\n== one real instance, every model, p=4 ==")
+    from repro.core.matrices import mcl_instance
+
+    # one symbolic inspection, seven plans: pass the instance itself
     inst = mcl_instance("dip", scale=0.2)
-    for model in MODELS:
-        hg = build_model(inst, model)
-        res = partition(hg, 4, eps=0.10, seed=0)
-        c = evaluate(hg, res.parts, 4)
+    print(f"{'model':12s} {'family':>6s} {'exec':>5s} {'predicted':>9s} "
+          f"{'planned':>9s} {'maxpart':>8s}  imb")
+    for model in repro.MODELS:
+        handle = repro.plan(inst, p=4, model=model)
+        r = handle.cost_report()
         print(
-            f"{model:11s} V={hg.n_vertices:7d} "
-            f"max-part-cost={c.max_part_cost:8d} "
-            f"(expand {c.expand}, fold {c.fold}) imb={c.comp_imbalance:.2f}"
+            f"{model:12s} {handle.spec.family:>6s} {str(r['executable']):>5s} "
+            f"{r['predicted_words']:9d} {r['planned_words']:9d} "
+            f"{r['predicted_max_part']:8d}  {r['comp_imbalance']:.2f}"
         )
 
-    print("\n== executing the row-wise partition (4 host devices) ==")
-    print("(run tests/multidev_runner.py for the shard_map executors, or:")
-    print("  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\")
-    print("  PYTHONPATH=src python tests/multidev_runner.py rowwise)")
+    print("\n== auto-selection + execution (values in, dense C out) ==")
+    rng = np.random.default_rng(0)
+    a_s = inst.a
+    b_s = inst.b
+    spgemm = repro.plan(inst, p=4, model="auto")
+    print(f"selected model: {spgemm.model} "
+          f"(predicted {spgemm.cost_report()['predicted_words']} words)")
+    if repro.device_count() >= spgemm.p:
+        a_vals = rng.standard_normal(a_s.nnz).astype(np.float32)
+        b_vals = rng.standard_normal(b_s.nnz).astype(np.float32)
+        dense_a = np.zeros(a_s.shape, np.float32)
+        dense_a[a_s.coo()] = a_vals
+        dense_b = np.zeros(b_s.shape, np.float32)
+        dense_b[b_s.coo()] = b_vals
+        c = spgemm(a_vals, b_vals)
+        err = float(np.abs(c - dense_a @ dense_b).max())
+        print(f"executed on {spgemm.p} devices: max |C - A@B| = {err:.2e}")
+    else:
+        print(f"(execution skipped: {repro.device_count()} device(s) < "
+              f"p={spgemm.p}; rerun with "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=4)")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,10 @@
 Partitions every hypergraph model of a small AMG instance (the 27-point
 stencil Galerkin product A·P), reports each model's predicted communication
 next to the words its lowered execution plan actually schedules, and — when
-the process owns >= p devices — runs the fine-grained executor against the
-dense oracle so predicted == measured is checked on live traffic.
+the process owns >= p devices — runs the executors against the dense oracle
+so predicted == measured is checked on live traffic.  Everything goes
+through the ``repro.api`` front door; the sweep table comes from
+``sweep_instance`` (the same selection ``model="auto"`` runs).
 
 Single device (plans + prediction only):
 
@@ -21,6 +23,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
+
+import repro
 
 
 def main():
@@ -65,40 +69,35 @@ def main():
 
 
 def iterated_multiply_demo(inst, p, rng):
-    """Amortization in action: compile the fine executor once, then run many
-    same-structure multiplies as value-only updates (the AMG/MCL pattern —
-    one partition, many products).  Needs >= p devices."""
+    """Amortization in action: one ``repro.plan`` handle, compiled once,
+    then many same-structure multiplies as value-only updates (the AMG/MCL
+    pattern — one partition, many products).  Needs >= p devices."""
     import time
 
-    import jax
-
-    if jax.device_count() < p:
-        print(f"\n(iterated-multiply demo skipped: {jax.device_count()} device(s) < p={p})")
+    if repro.device_count() < p:
+        print(f"\n(iterated-multiply demo skipped: {repro.device_count()} "
+              f"device(s) < p={p})")
         return
-    from jax.sharding import Mesh
-
-    from repro.distributed.plan_ir import plan_fine_from_dense
-    from repro.distributed.runtime import compile_spgemm, trace_count
+    from repro.distributed.runtime import trace_count
 
     # plan + compile ONCE, from the structures alone (no dense operands)
-    plan, pinst = plan_fine_from_dense(inst.a, inst.b, p)
-    mesh = Mesh(np.array(jax.devices()[:p]), ("x",))
+    spgemm = repro.plan(inst.a, inst.b, p=p, model="fine", name=inst.name)
     t0 = time.perf_counter()
-    exe = compile_spgemm(plan, pinst.a, pinst.b, mesh, c_structure=pinst.c)
+    exe = spgemm.compile()
     cold = time.perf_counter() - t0
     traces = trace_count()
     # many multiplies on the fixed structure: values only, no retracing
     t0 = time.perf_counter()
     iters = 10
     for _ in range(iters):
-        a_vals = rng.standard_normal(pinst.a.nnz).astype(np.float32)
-        b_vals = rng.standard_normal(pinst.b.nnz).astype(np.float32)
-        c_local = jax.block_until_ready(exe(a_vals, b_vals))
+        a_vals = rng.standard_normal(inst.a.nnz).astype(np.float32)
+        b_vals = rng.standard_normal(inst.b.nnz).astype(np.float32)
+        c = exe(a_vals, b_vals)  # dense C, synced
     per_call = (time.perf_counter() - t0) / iters
     print(
         f"\ncompile-once runtime (fine, p={p}): compile {cold * 1e3:.0f} ms once, "
         f"then {per_call * 1e6:.0f} us/multiply over {iters} same-structure calls "
-        f"({trace_count() - traces} retraces); dense C via exe.unpack(c_local)"
+        f"({trace_count() - traces} retraces); C is dense, trimmed, ready"
     )
 
 

@@ -1,0 +1,54 @@
+"""repro — hypergraph-partitioned SpGEMM (paper reproduction, JAX/Pallas).
+
+The public surface is the ``repro.api`` pipeline over the declarative model
+registry:
+
+    import repro
+
+    spgemm = repro.plan(A, B, p=8, model="auto")
+    spgemm.cost_report()
+    C = spgemm.compile()(a_vals, b_vals)      # == (A @ B) values
+
+Submodules (``repro.core``, ``repro.sparse``, ``repro.distributed``) remain
+importable for the individual pipeline stages; everything listed in
+``__all__`` here is the supported front door and is pinned by
+``tests/test_api_surface.py``.  Attributes resolve lazily (PEP 562) so that
+``import repro`` — and any ``repro.<submodule>`` import — never drags jax in.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "MODELS",
+    "MODEL_SPECS",
+    "CompiledSpGEMM",
+    "ModelSpec",
+    "PlannedSpGEMM",
+    "SpGEMMInstance",
+    "device_count",
+    "executable_models",
+    "plan",
+]
+
+_FROM_API = ("plan", "PlannedSpGEMM", "CompiledSpGEMM", "device_count")
+_FROM_REGISTRY = ("ModelSpec", "MODEL_SPECS", "executable_models")
+_FROM_CORE = ("MODELS", "SpGEMMInstance")
+
+
+def __getattr__(name: str):
+    if name in _FROM_API:
+        from repro import api
+
+        return getattr(api, name)
+    if name in _FROM_REGISTRY:
+        from repro.distributed import registry
+
+        return getattr(registry, name)
+    if name in _FROM_CORE:
+        from repro.core import spgemm_models
+
+        return getattr(spgemm_models, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

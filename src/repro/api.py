@@ -1,0 +1,340 @@
+"""One front door: ``repro.plan(A, B, p=8)`` — partition to product.
+
+The paper's thesis is that a hypergraph partition IS an SpGEMM algorithm.
+Using the library used to mean hand-stitching five layers —
+``SpGEMMInstance`` -> ``build_model`` -> ``partition`` ->
+plan lowering -> ``compile_spgemm`` — with model-specific folklore (monoC's
+2D mesh, per-model value layouts, dtype promotion) known only to
+``select._execute``.  This module is the stable public pipeline over the
+declarative ``ModelSpec`` registry:
+
+    import repro
+
+    spgemm = repro.plan(A, B, p=8, model="auto", eps=0.10, seed=0)
+    spgemm.cost_report()             # predicted / planned / padded words
+    exe = spgemm.compile()           # mesh + dtype + backend per ModelSpec
+    C = exe(a_vals, b_vals)          # dense C, == A @ B
+    C = spgemm(a_vals, b_vals)       # same, compile-on-first-use
+
+``A`` / ``B`` are structures (dense array, scipy sparse, or
+``SparseStructure``); values are 1-D nonzero vectors in canonical CSR order
+for *every* model — the registry's ``pack_values`` hides monoC's block
+layout.  ``model="auto"`` partitions every executable model and keeps the
+communication-minimal one (the same min-predicted-words rule the
+``select.sweep_instance`` report applies, scoped to the models that can
+actually run).
+
+Everything jax-flavored is imported lazily so that planning (a pure
+numpy/scipy affair) works — and stays fast to import — without touching a
+device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import PartitionResult, evaluate
+from repro.core import partition as _partition
+from repro.core.comm import (
+    CommCosts,
+    memory_dependent_bound,
+    memory_independent_bound,
+)
+from repro.core.hypergraph import Hypergraph
+from repro.core.spgemm_models import MODELS, SpGEMMInstance
+from repro.distributed.plan_ir import (
+    ExecutionPlan,
+    build_volume_plan,
+    measured_route_words,
+)
+from repro.distributed.registry import ModelSpec, executable_models, get_spec
+__all__ = [
+    "CompiledSpGEMM",
+    "PlannedSpGEMM",
+    "device_count",
+    "plan",
+]
+
+
+def device_count() -> int:
+    """Devices visible to this process (the one place jax is asked — the
+    sweep, the executors and the examples all route through here)."""
+    import jax
+
+    return jax.device_count()
+
+
+# ---------------------------------------------------------------------------
+# the compiled handle
+# ---------------------------------------------------------------------------
+class CompiledSpGEMM:
+    """A compiled SpGEMM pipeline: canonical values in, dense C out.
+
+    Wraps the runtime's AOT executable with the model's value packing and
+    unpacking so every model takes 1-D nonzero value vectors (canonical CSR
+    order of the planned structures) and returns the dense (I, J) product —
+    no caller-visible mesh, dtype, block or layout special-casing.  The raw
+    device-shard interface stays available as ``.runtime``.
+    """
+
+    def __init__(self, planned: "PlannedSpGEMM", runtime_exe, spec: ModelSpec):
+        self.planned = planned
+        self.runtime = runtime_exe
+        self.spec = spec
+        I, _, J = planned.instance.shape
+        self._out = (I, J)
+
+    @property
+    def mesh(self):
+        return self.runtime.mesh
+
+    @property
+    def dtype(self):
+        return self.runtime.dtype
+
+    @property
+    def cost_model_words(self) -> tuple[int, int]:
+        """(ideal, padded) words per call, from the plan's routes."""
+        return self.runtime.cost_model_words
+
+    def pack(self, a_values, b_values) -> tuple[np.ndarray, np.ndarray]:
+        """Canonical 1-D nonzero vectors -> the executor's value layout."""
+        block = self.runtime.block
+        return (
+            self.spec.pack_values(np.asarray(a_values), block),
+            self.spec.pack_values(np.asarray(b_values), block),
+        )
+
+    def __call__(self, a_values, b_values) -> np.ndarray:
+        a, b = self.pack(a_values, b_values)
+        I, J = self._out
+        return np.asarray(self.runtime.unpack(self.runtime(a, b)))[:I, :J]
+
+
+# ---------------------------------------------------------------------------
+# the planned handle
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)  # identity semantics: fields hold ndarrays
+class PlannedSpGEMM:
+    """One partition-is-the-algorithm pipeline, planned and ready.
+
+    Owns the instance, the model hypergraph, the ``PartitionResult`` and
+    (for executable models) the lowered ``ExecutionPlan``.  ``compile()``
+    builds the model's process grid and AOT-compiles the executor;
+    ``execute``/``__call__`` go straight from canonical nonzero values to
+    the dense product, compiling on first use (cached thereafter).
+    """
+
+    instance: SpGEMMInstance
+    model: str
+    hypergraph: Hypergraph
+    partition: PartitionResult
+    execution_plan: ExecutionPlan | None
+    eps: float = 0.10
+    seed: int = 0
+    selection: list[dict] | None = None  # model="auto" sweep records
+
+    @property
+    def spec(self) -> ModelSpec:
+        return get_spec(self.model)
+
+    @property
+    def p(self) -> int:
+        return self.partition.p
+
+    @property
+    def executable(self) -> bool:
+        return self.execution_plan is not None
+
+    def costs(self) -> CommCosts:
+        """The partition's communication metrics (Lemma 4.2 machinery)."""
+        return evaluate(self.hypergraph, self.partition.parts, self.p)
+
+    def cost_report(self) -> dict:
+        """Predicted vs planned vs padded words, plus the eq. (1) bounds.
+
+        - ``predicted_words``: the connectivity metric the partitioner
+          minimized (sum over cut nets of c(n) * (lambda(n) - 1));
+        - ``planned_words``: the words the lowered plan's routing tables
+          actually schedule (transfer enumeration — an independent code
+          path), item-weighted per the model's convention;
+        - ``padded_words``: what the padded all_to_all slots move on the
+          wire;
+        - ``bounds``: the classical eq. (1) lower bounds the paper compares
+          against (local memory taken as 3 * nnz / p, the bench convention).
+        """
+        inst, p = self.instance, self.p
+        costs = self.costs()
+        n_nz = inst.a.nnz + inst.b.nnz + inst.c.nnz
+        local_mem = max(3 * n_nz / p, 64)
+        report = {
+            "model": self.model,
+            "p": p,
+            "executable": self.executable,
+            "n_vertices": self.hypergraph.n_vertices,
+            "n_pins": self.hypergraph.n_pins,
+            "predicted_words": int(costs.connectivity),
+            "predicted_max_part": int(costs.max_part_cost),
+            "expand_words": int(costs.expand),
+            "fold_words": int(costs.fold),
+            "comp_imbalance": round(costs.comp_imbalance, 4),
+            "bounds": {
+                "memory_dependent": round(
+                    memory_dependent_bound(inst.n_mult, p, local_mem), 1
+                ),
+                "memory_independent": round(
+                    memory_independent_bound(inst.n_mult, n_nz, p), 1
+                ),
+            },
+        }
+        plan_obj = self.execution_plan
+        if plan_obj is None:
+            # volume-only models still get an IR whose words == prediction
+            # (net costs ride on the routes' per-item word overrides)
+            plan_obj = build_volume_plan(self.hypergraph, self.partition.parts, p)
+            report["planned_words"] = plan_obj.comm_words_ideal
+        else:
+            item_words = self.spec.item_words(inst)
+            report["planned_words"] = measured_route_words(plan_obj, item_words)
+            if item_words is not None:
+                report["planned_items"] = measured_route_words(plan_obj)
+        report["padded_words"] = plan_obj.comm_words_padded
+        return report
+
+    def compile(
+        self,
+        devices=None,
+        dtype=np.float32,
+        backend: str | None = None,
+    ) -> CompiledSpGEMM:
+        """AOT-compile the pipeline's executor.
+
+        The process grid comes from the model's ``ModelSpec`` (monoC gets
+        its 2D mesh, including the odd-p fallback, without the caller ever
+        seeing it), as do backend defaults; ``devices`` optionally pins the
+        device set (default: the first p of ``jax.devices()``).
+        """
+        if self.execution_plan is None:
+            if self.spec.executable:
+                raise ValueError(
+                    f"model {self.model!r} was planned with include_nz=True "
+                    f"but its lowerer does not accept V^nz partitions; "
+                    f"replan with include_nz=False to execute"
+                )
+            raise ValueError(
+                f"model {self.model!r} is volume-only (predicts, never "
+                f"executes); executable models: {executable_models()}"
+            )
+        from repro.distributed.runtime import compile_spgemm
+
+        spec = self.spec
+        inst = self.instance
+        mesh = spec.default_mesh(self.p, devices)
+        if backend is None:
+            backend = spec.compile_defaults.get("backend")
+        runtime_exe = compile_spgemm(
+            self.execution_plan,
+            inst.a,
+            inst.b,
+            mesh,
+            dtype=dtype,
+            backend=backend,
+            block=spec.compile_defaults.get("block", 1),
+            c_structure=inst.c,
+        )
+        return CompiledSpGEMM(self, runtime_exe, spec)
+
+    def execute(self, a_values, b_values, **compile_kwargs) -> np.ndarray:
+        """Canonical nonzero values in, dense C out.
+
+        Compiles on first use (the runtime LRU makes repeat calls hit the
+        same AOT executable); dtype defaults to the promoted value dtype.
+        """
+        a_values = np.asarray(a_values)
+        b_values = np.asarray(b_values)
+        compile_kwargs.setdefault(
+            "dtype", np.promote_types(a_values.dtype, b_values.dtype)
+        )
+        return self.compile(**compile_kwargs)(a_values, b_values)
+
+    __call__ = execute
+
+
+# ---------------------------------------------------------------------------
+# the front door
+# ---------------------------------------------------------------------------
+def _plan_one(
+    inst: SpGEMMInstance, model: str, p: int, eps: float, seed: int, include_nz: bool
+) -> PlannedSpGEMM:
+    spec = get_spec(model)
+    hg = spec.build(inst, include_nz=include_nz)
+    res = _partition(hg, p, eps=eps, seed=seed)
+    plan_obj = None
+    if spec.lower is not None and (not include_nz or spec.lower_include_nz):
+        plan_obj = spec.lower(inst, res.parts, p)
+    return PlannedSpGEMM(
+        instance=inst,
+        model=model,
+        hypergraph=hg,
+        partition=res,
+        execution_plan=plan_obj,
+        eps=eps,
+        seed=seed,
+    )
+
+
+def plan(
+    A,
+    B=None,
+    p: int = 8,
+    model: str = "auto",
+    eps: float = 0.10,
+    seed: int = 0,
+    name: str = "",
+    include_nz: bool = False,
+) -> PlannedSpGEMM:
+    """Plan a distributed SpGEMM: model the instance, partition, lower.
+
+    ``A`` / ``B`` give the nonzero structures (dense array, scipy sparse
+    matrix, or ``SparseStructure`` — values never enter the inspector);
+    alternatively ``A`` may be an existing ``SpGEMMInstance`` (``B`` omitted)
+    so repeated per-model planning reuses one symbolic inspection.
+    ``model`` is one of the paper's seven (``repro.MODELS``) or ``"auto"``:
+    partition every *executable* model and keep the communication-minimal
+    one (the same min-predicted-words rule ``sweep_instance`` reports); the
+    per-model records land on ``.selection``.  Volume-only models
+    (columnwise, monoA, monoB) plan and predict but cannot ``compile()``.
+    ``include_nz`` keeps the V^nz nonzero vertices (Sec. 4 reading); the
+    partitioner then places them too, and the handle stays cost/analysis-
+    only unless the model's lowerer understands such partitions (fine does).
+    """
+    if isinstance(A, SpGEMMInstance):
+        if B is not None:
+            raise ValueError("B must be omitted when A is an SpGEMMInstance")
+        inst = A
+    else:
+        if B is None:
+            raise ValueError("B is required unless A is an SpGEMMInstance")
+        inst = SpGEMMInstance.from_operands(A, B, name=name)
+    if model != "auto":
+        if model not in MODELS:
+            raise ValueError(f"unknown model {model!r}; choose from {MODELS} or 'auto'")
+        return _plan_one(inst, model, p, eps, seed, include_nz)
+    candidates = [
+        _plan_one(inst, m, p, eps, seed, include_nz) for m in executable_models()
+    ]
+    records = []
+    for cand in candidates:
+        rec = cand.cost_report()
+        rec["selected"] = False
+        records.append(rec)
+    # auto means "pick something that can run": with include_nz only some
+    # lowerers accept the partition, so restrict to those when any exist
+    viable = [i for i, c in enumerate(candidates) if c.execution_plan is not None]
+    pool = viable or range(len(candidates))
+    best = min(pool, key=lambda i: records[i]["predicted_words"])
+    records[best]["selected"] = True
+    chosen = candidates[best]
+    chosen.selection = records
+    return chosen

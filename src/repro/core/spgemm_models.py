@@ -81,6 +81,16 @@ class SpGEMMInstance:
         self.mult_i, self.mult_k, self.mult_j = nontrivial_multiplications(a, b)
         self.n_mult = len(self.mult_i)
 
+    @classmethod
+    def from_operands(cls, A, B, name: str = "") -> "SpGEMMInstance":
+        """Build an instance from anything structure-shaped: dense arrays,
+        scipy sparse matrices, or ``SparseStructure`` objects (values, if
+        present, are ignored — the inspector is structure-only).  This is
+        what ``repro.plan`` calls."""
+        from repro.sparse.structure import as_structure
+
+        return cls(as_structure(A), as_structure(B), name=name)
+
     @property
     def shape(self) -> tuple[int, int, int]:
         return self.a.shape[0], self.a.shape[1], self.b.shape[1]

@@ -7,7 +7,9 @@ prescribes.  The plan containers and the vectorized builders live in
 re-exports them and keeps the original loop-based row-wise inspector as an
 executable specification — ``tests/test_plan_ir.py`` pins the vectorized
 builder to it byte for byte, and ``benchmarks/bench_plan_build.py`` measures
-the speedup.
+the speedup.  ``build_rowwise_plan_loop`` is importable from here only: it
+left the ``repro.distributed`` public surface in the api_redesign PR (a
+once-warning shim covers old package-level imports).
 
 - row-wise: device d owns row set R_d of A and C, and row set S_d of B (the
   partition of V^B, or round-robin when V^nz was omitted).  The expand phase

@@ -115,6 +115,30 @@ class ExecutionPlan:
         return (padded - self.comm_words_ideal) / max(padded, 1)
 
 
+def measured_route_words(
+    plan: "ExecutionPlan", item_words: dict[str, np.ndarray] | None = None
+) -> int:
+    """Words the plan's routing tables actually ship (valid slots only).
+
+    Counted from the materialized ``recv_key`` tables — the executor moves
+    exactly these entries (plus padding) — NOT from the hypergraph's lambda
+    counting, so equality with ``evaluate().connectivity`` is a real check
+    that the cut and the schedule describe the same traffic.  ``item_words``
+    optionally maps a route name to per-global-item useful word counts
+    (e.g. nnz per shipped B row); routes not named count ``word_size`` per
+    item.  Fold-phase words tracked only in ``stats`` (the outer plan's
+    psum_scatter) are added as-is since that phase has no routing table.
+    """
+    words = 0
+    for name, r in plan.routes.items():
+        keys = r.recv_key[r.recv_key >= 0]
+        if item_words is not None and name in item_words:
+            words += int(item_words[name][keys].sum())
+        else:
+            words += len(keys) * r.word_size
+    return int(words + plan.stats.get("fold_words_ideal", 0))
+
+
 # ---------------------------------------------------------------------------
 # Vectorized construction primitives
 # ---------------------------------------------------------------------------

@@ -1,0 +1,411 @@
+"""Declarative model registry: one ``ModelSpec`` per paper model.
+
+The paper's thesis is that a hypergraph partition IS an SpGEMM algorithm;
+this module is where each algorithm's pieces are declared in one place
+instead of being re-dispatched by name at three independent call sites
+(``select.build_executable_plan``'s if/elif chain, ``runtime``'s per-model
+packing branches, and the ``EXECUTABLE`` tuple).  A ``ModelSpec`` bundles:
+
+- ``build``: the hypergraph builder (Sec. 5 / Def. 3.1, via ``core``);
+- ``lower``: partition -> ``ExecutionPlan`` (pin-derived ownership so the
+  planned words equal the model's connectivity prediction);
+- ``mesh_shape`` / ``axis_names``: the process-grid geometry the executor
+  wants — monoC's ``(2, p//2)`` (``(1, p)`` for odd p, including p=1) lives
+  HERE, not at call sites;
+- ``make_runner``: the value-time executor core (packing closure + step
+  function) the compile-once runtime AOT-compiles;
+- ``unpack`` / ``pack_values``: device-major shards <-> caller value layout;
+- ``item_words`` / ``measured``: how the plan's routed words relate to the
+  model's predicted words (exact, useful-exact, or volume-only).
+
+Models without an executor (columnwise, monoA, monoB) are explicitly
+volume-only: they still predict (``build_volume_plan`` gives their cut an
+IR), but ``lower``/``make_runner`` are ``None``.
+
+Everything jax-flavored is imported inside the runner factories so that
+importing the registry (and therefore ``select``/``api``) stays light.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.spgemm_models import MODELS, SpGEMMInstance, build_model
+from repro.distributed.plan_ir import (
+    ExecutionPlan,
+    build_fine_plan,
+    build_monoC_plan,
+    build_outer_plan,
+    build_rowwise_plan,
+    derive_owner_from_pins,
+)
+
+
+# ---------------------------------------------------------------------------
+# runner plumbing shared by the factories
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RunnerSetup:
+    """What the compile-once runtime needs to AOT-compile one executor:
+    a jit-compatible ``run(a_values, b_values) -> c_shards`` closure (route
+    tables and scatter indices baked in as constants), the value shapes it
+    was built for, and the dense shape ``unpack`` recovers."""
+
+    run: Callable
+    a_shape: tuple[int, ...]
+    b_shape: tuple[int, ...]
+    out_shape: tuple[int, int]
+
+
+def owner_slot(local_ids: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Invert a padded per-device id list into global-id -> (device, slot)
+    lookup arrays (every id appears exactly once by construction)."""
+    dev = np.empty(n, dtype=np.int64)
+    slot = np.empty(n, dtype=np.int64)
+    d, s = np.nonzero(local_ids >= 0)
+    g = local_ids[d, s]
+    dev[g] = d
+    slot[g] = s
+    return dev, slot
+
+
+# ---------------------------------------------------------------------------
+# plan lowerers (partition -> ExecutionPlan, pin-derived ownership)
+# ---------------------------------------------------------------------------
+def _lower_rowwise(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPlan:
+    I, K, _ = inst.shape
+    acsc = inst.a_csc
+    ks = np.repeat(np.arange(K, dtype=np.int64), np.diff(acsc.indptr))
+    b_part = derive_owner_from_pins(ks, parts[acsc.indices.astype(np.int64)], K, p)
+    return build_rowwise_plan(inst, parts, p, b_part=b_part)
+
+
+def _lower_outer(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPlan:
+    return build_outer_plan(inst, parts, p)
+
+
+def _lower_monoC(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPlan:
+    mult_dev = parts[inst.mult_c_pos]
+    a_part = derive_owner_from_pins(inst.mult_a_pos, mult_dev, inst.a.nnz, p)
+    b_part = derive_owner_from_pins(inst.mult_b_pos, mult_dev, inst.b.nnz, p)
+    return build_monoC_plan(inst, parts, p, a_part=a_part, b_part=b_part)
+
+
+def _lower_fine(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPlan:
+    return build_fine_plan(inst, parts, p)
+
+
+# ---------------------------------------------------------------------------
+# runner factories (value-time executor cores; moved out of runtime's
+# per-model branches — jax imported inside so the registry stays light)
+# ---------------------------------------------------------------------------
+def _rowwise_runner(plan, a_structure, b_structure, mesh, *, dtype, block, backend, axis, axes):
+    import jax.numpy as jnp
+
+    from repro.distributed import spgemm_exec as _exec
+
+    p = plan.p
+    I, K = a_structure.shape
+    _, J = b_structure.shape
+    if len(plan.ownership["a_row"]) != I or len(plan.ownership["b_row"]) != K:
+        raise ValueError("plan was built for different operand shapes")
+    ar, ac = a_structure.coo()
+    br, bc = b_structure.coo()
+    rdev, rslot = owner_slot(plan.local_ids["a_row"], I)
+    bdev, bslot = owner_slot(plan.local_ids["b_row"], K)
+    I_max = plan.local_ids["a_row"].shape[1]
+    K_max = plan.local_ids["b_row"].shape[1]
+    a_idx = tuple(jnp.asarray(v) for v in (rdev[ar], rslot[ar], ac))
+    b_idx = tuple(jnp.asarray(v) for v in (bdev[br], bslot[br], bc))
+    step = _exec.make_rowwise_step(plan, mesh, K, J, axis=axis)
+
+    def run(a_values, b_values):
+        a_local = jnp.zeros((p, I_max, K), dtype).at[a_idx].set(a_values)
+        b_local = jnp.zeros((p, K_max, J), dtype).at[b_idx].set(b_values)
+        return step(a_local, b_local)
+
+    return RunnerSetup(run, (a_structure.nnz,), (b_structure.nnz,), (I, J))
+
+
+def _outer_runner(plan, a_structure, b_structure, mesh, *, dtype, block, backend, axis, axes):
+    import jax.numpy as jnp
+
+    from repro.distributed import spgemm_exec as _exec
+
+    p = plan.p
+    I, K = a_structure.shape
+    _, J = b_structure.shape
+    if len(plan.ownership["k"]) != K:
+        raise ValueError("plan was built for different operand shapes")
+    ar, ac = a_structure.coo()
+    br, bc = b_structure.coo()
+    kdev, kslot = owner_slot(plan.local_ids["k"], K)
+    K_max = plan.local_ids["k"].shape[1]
+    a_idx = tuple(jnp.asarray(v) for v in (kdev[ac], ar, kslot[ac]))
+    b_idx = tuple(jnp.asarray(v) for v in (kdev[br], kslot[br], bc))
+    step = _exec.make_outer_step(plan, mesh, I, J, axis=axis)
+
+    def run(a_values, b_values):
+        a_cols = jnp.zeros((p, I, K_max), dtype).at[a_idx].set(a_values)
+        b_rows = jnp.zeros((p, K_max, J), dtype).at[b_idx].set(b_values)
+        return step(a_cols, b_rows)
+
+    return RunnerSetup(run, (a_structure.nnz,), (b_structure.nnz,), (I, J))
+
+
+def _fine_runner(plan, a_structure, b_structure, mesh, *, dtype, block, backend, axis, axes):
+    import jax.numpy as jnp
+
+    from repro.distributed import spgemm_exec as _exec
+
+    p = plan.p
+    I, _ = a_structure.shape
+    _, J = b_structure.shape
+    nA, nB = a_structure.nnz, b_structure.nnz
+    if nA != len(plan.a_part) or nB != len(plan.b_part):
+        raise ValueError("plan was built for a different nonzero structure")
+    adev, aslot = owner_slot(plan.local_ids["a_nz"], nA)
+    bdev, bslot = owner_slot(plan.local_ids["b_nz"], nB)
+    N_a = plan.local_ids["a_nz"].shape[1]
+    N_b = plan.local_ids["b_nz"].shape[1]
+    a_idx = (jnp.asarray(adev), jnp.asarray(aslot))
+    b_idx = (jnp.asarray(bdev), jnp.asarray(bslot))
+    step = _exec.make_fine_step(plan, mesh, axis=axis)
+
+    def run(a_values, b_values):
+        a_own = jnp.zeros((p, N_a), dtype).at[a_idx].set(a_values)
+        b_own = jnp.zeros((p, N_b), dtype).at[b_idx].set(b_values)
+        return step(a_own, b_own)
+
+    return RunnerSetup(run, (nA,), (nB,), (I, J))
+
+
+def _monoC_runner(plan, a_structure, b_structure, mesh, *, dtype, block, backend, axis, axes):
+    # a_structure / b_structure are the BLOCK structures here; values are
+    # (nnz, block, block) arrays in block CSR (= to_bsr) order
+    import jax.numpy as jnp
+
+    from repro.distributed import spgemm_exec as _exec
+
+    p = plan.p
+    I, _ = a_structure.shape
+    _, J = b_structure.shape
+    nA, nB = a_structure.nnz, b_structure.nnz
+    if nA != len(plan.a_part) or nB != len(plan.b_part):
+        raise ValueError("plan was built for a different block structure")
+    adev, aslot = owner_slot(plan.local_ids["a_nz"], nA)
+    bdev, bslot = owner_slot(plan.local_ids["b_nz"], nB)
+    N_a = plan.local_ids["a_nz"].shape[1]
+    N_b = plan.local_ids["b_nz"].shape[1]
+    a_idx = (jnp.asarray(adev), jnp.asarray(aslot))
+    b_idx = (jnp.asarray(bdev), jnp.asarray(bslot))
+    step = _exec.make_monoC_step(plan, mesh, block=block, backend=backend, axes=axes)
+
+    def run(a_values, b_values):
+        a_own = jnp.zeros((p, N_a, block, block), dtype).at[a_idx].set(a_values)
+        b_own = jnp.zeros((p, N_b, block, block), dtype).at[b_idx].set(b_values)
+        return step(a_own, b_own)
+
+    return RunnerSetup(
+        run, (nA, block, block), (nB, block, block), (I * block, J * block)
+    )
+
+
+# ---------------------------------------------------------------------------
+# unpackers (uniform signature; device-major shards -> dense array)
+# ---------------------------------------------------------------------------
+def _unpack_rowwise(c_local, plan, c_structure, shape):
+    from repro.distributed.spgemm_exec import unpack_rowwise_result
+
+    return unpack_rowwise_result(c_local, plan, shape[0])
+
+
+def _unpack_outer(c_local, plan, c_structure, shape):
+    return np.asarray(c_local).reshape(-1, shape[1])[: shape[0]]
+
+
+def _unpack_monoC(c_local, plan, c_structure, shape):
+    from repro.distributed.spgemm_exec import unpack_monoC_result
+
+    return unpack_monoC_result(c_local, plan, c_structure, shape)
+
+
+def _unpack_fine(c_local, plan, c_structure, shape):
+    from repro.distributed.spgemm_exec import unpack_fine_result
+
+    return unpack_fine_result(c_local, plan, c_structure, shape)
+
+
+# ---------------------------------------------------------------------------
+# value packing (canonical 1-D nonzero vectors -> executor value layout)
+# ---------------------------------------------------------------------------
+def _values_flat(vals: np.ndarray, block: int) -> np.ndarray:
+    return vals
+
+
+def _values_blocked(vals: np.ndarray, block: int) -> np.ndarray:
+    return np.asarray(vals).reshape(-1, block, block)
+
+
+# ---------------------------------------------------------------------------
+# mesh geometry
+# ---------------------------------------------------------------------------
+def _mesh_1d(p: int) -> tuple[int, ...]:
+    return (p,)
+
+
+def _mesh_monoC(p: int) -> tuple[int, ...]:
+    # the executor flattens the 2D mesh for its all_to_alls, so any
+    # factorization of p works; (1, p) covers odd p (and p=1) — the former
+    # caller-side "odd p skipped" quirk is gone
+    return (2, p // 2) if p % 2 == 0 and p > 1 else (1, p)
+
+
+# ---------------------------------------------------------------------------
+# the spec and the registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Everything one paper model needs, declared in one place.
+
+    ``measured`` states how the plan's route-counted words relate to the
+    hypergraph prediction: "exact" (replicated-free plans — words on the
+    wire == connectivity), "useful" (unit-cost prediction recovered by
+    nnz-weighting / fold accounting), or None (volume-only model)."""
+
+    name: str
+    family: str  # "1D" | "2D" | "3D" (paper Sec. 5 classification)
+    build: Callable  # (inst, include_nz=False) -> Hypergraph
+    lower: Callable | None = None  # (inst, parts, p) -> ExecutionPlan
+    make_runner: Callable | None = None  # see RunnerSetup
+    unpack: Callable | None = None  # (c_local, plan, c_structure, shape) -> dense
+    mesh_shape: Callable = _mesh_1d  # p -> process-grid shape
+    axis_names: tuple[str, ...] = ("x",)
+    pack_values: Callable = _values_flat  # (vals, block) -> executor layout
+    item_words: Callable = lambda inst: None  # (inst) -> {route: words-per-item}
+    needs_c_structure: bool = False  # unpack requires inst.c
+    lower_include_nz: bool = False  # lowerer accepts include_nz partitions
+    compile_defaults: dict = dataclasses.field(default_factory=dict)
+    measured: str | None = None  # "exact" | "useful" | None
+    notes: str = ""
+
+    @property
+    def executable(self) -> bool:
+        return self.lower is not None and self.make_runner is not None
+
+    def default_mesh(self, p: int, devices=None):
+        """Build the model's process grid over ``devices`` (default: the
+        first p of ``jax.devices()``) — mesh geometry is a property of the
+        algorithm, not of call sites."""
+        import jax
+        from jax.sharding import Mesh
+
+        devs = list(jax.devices() if devices is None else devices)
+        if len(devs) < p:
+            raise ValueError(
+                f"{self.name} needs p={p} devices but only {len(devs)} available"
+            )
+        return Mesh(np.array(devs[:p]).reshape(self.mesh_shape(p)), self.axis_names)
+
+
+def _build(model: str) -> Callable:
+    def build(inst: SpGEMMInstance, include_nz: bool = False):
+        return build_model(inst, model, include_nz=include_nz)
+
+    return build
+
+
+MODEL_SPECS: dict[str, ModelSpec] = {
+    "fine": ModelSpec(
+        name="fine",
+        family="3D",
+        build=_build("fine"),
+        lower=_lower_fine,
+        make_runner=_fine_runner,
+        unpack=_unpack_fine,
+        needs_c_structure=True,
+        # build_fine_plan adopts include_nz vertex placements as ownership
+        lower_include_nz=True,
+        measured="exact",
+        notes="flop-level partition; expand-expand-reduce; words == connectivity",
+    ),
+    "rowwise": ModelSpec(
+        name="rowwise",
+        family="1D",
+        build=_build("rowwise"),
+        lower=_lower_rowwise,
+        make_runner=_rowwise_runner,
+        unpack=_unpack_rowwise,
+        item_words=lambda inst: {"expand": inst.b.row_counts()},
+        measured="useful",
+        notes="ships whole B rows; nnz-weighted route words == prediction",
+    ),
+    "columnwise": ModelSpec(
+        name="columnwise",
+        family="1D",
+        build=_build("columnwise"),
+        notes="volume-only (symmetric to rowwise via C^T = B^T A^T)",
+    ),
+    "outer": ModelSpec(
+        name="outer",
+        family="1D",
+        build=_build("outer"),
+        lower=_lower_outer,
+        make_runner=_outer_runner,
+        unpack=_unpack_outer,
+        measured="useful",
+        notes="fold phase is psum_scatter; ideal fold words == prediction",
+    ),
+    "monoA": ModelSpec(
+        name="monoA",
+        family="2D",
+        build=_build("monoA"),
+        notes="volume-only",
+    ),
+    "monoB": ModelSpec(
+        name="monoB",
+        family="2D",
+        build=_build("monoB"),
+        notes="volume-only",
+    ),
+    "monoC": ModelSpec(
+        name="monoC",
+        family="2D",
+        build=_build("monoC"),
+        lower=_lower_monoC,
+        make_runner=_monoC_runner,
+        unpack=_unpack_monoC,
+        mesh_shape=_mesh_monoC,
+        axis_names=("x", "y"),
+        pack_values=_values_blocked,
+        needs_c_structure=True,
+        # scalar instances (block=1) through the BSR kernel pay interpret-mode
+        # overhead on CPU for no reuse; the dense XLA fallback is the right
+        # local-compute default until a caller opts into Pallas explicitly
+        compile_defaults={"backend": "xla"},
+        measured="exact",
+        notes="C nonzero lives on one device; 2D mesh, BSR local compute",
+    ),
+}
+
+#: models whose partitions never lower to an executor (they still predict)
+VOLUME_ONLY = tuple(n for n, s in MODEL_SPECS.items() if not s.executable)
+
+assert set(MODEL_SPECS) == set(MODELS), "registry out of sync with core MODELS"
+
+
+def get_spec(model: str) -> ModelSpec:
+    try:
+        return MODEL_SPECS[model]
+    except KeyError:
+        raise ValueError(
+            f"unknown model {model!r}; choose from {tuple(MODEL_SPECS)}"
+        ) from None
+
+
+def executable_models() -> tuple[str, ...]:
+    """Names of the models with a full plan-lowering + executor path, in
+    ``MODELS`` order."""
+    return tuple(n for n in MODELS if MODEL_SPECS[n].executable)

@@ -23,13 +23,19 @@ so nothing caches).
   structure work and zero retracing — the steady-state cost is exactly the
   collectives plus local compute the plan prescribes.
 
+Which packing closure, step builder and unpacker a plan gets is no longer
+decided here: ``registry.ModelSpec.make_runner`` / ``.unpack`` are the single
+declarative source — this module only owns the model-agnostic machinery
+(fingerprints, AOT compile, donation, the bounded LRU).
+
 Value conventions (``__call__`` inputs):
 
 - rowwise / outer / fine: 1-D nonzero value vectors in the operands'
   canonical CSR order (``SparseStructure`` order — what
   ``structure_and_values`` returns);
 - monoC: (nnz, b, b) block-value arrays in the *block* structure's CSR
-  order (``to_bsr(...).blocks`` order).
+  order (``to_bsr(...).blocks`` order).  The ``repro.api`` front door hides
+  this behind ``ModelSpec.pack_values``.
 
 ``compile_spgemm`` memoizes executors in a bounded LRU keyed on
 (plan fingerprint, structure fingerprints, mesh, dtype, backend, block,
@@ -45,13 +51,22 @@ import warnings
 from collections import OrderedDict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import scipy.sparse as sp
 from jax.sharding import Mesh
 
-from repro.distributed import spgemm_exec as _exec
-from repro.sparse.structure import SparseStructure
+from repro.distributed.registry import get_spec
+from repro.sparse.structure import SparseStructure, structure_and_values
+
+__all__ = [
+    "CompiledSpGEMM",
+    "compile_spgemm",
+    "cache_clear",
+    "cache_info",
+    "plan_fingerprint",
+    "structure_and_values",
+    "structure_fingerprint",
+    "trace_count",
+]
 
 # -- retrace accounting ------------------------------------------------------
 _TRACE_COUNT = 0
@@ -114,49 +129,13 @@ def _mesh_key(mesh: Mesh) -> tuple:
     )
 
 
-# -- operand normalization ---------------------------------------------------
-def structure_and_values(x) -> tuple[SparseStructure, np.ndarray]:
-    """Normalize an operand to (structure, values-in-canonical-CSR-order).
-
-    Accepts a dense ndarray, any scipy sparse matrix, or an
-    ``(SparseStructure, values)`` pair whose values already follow the
-    structure's CSR order — sparse callers never round-trip through dense.
-    """
-    if isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], SparseStructure):
-        s, vals = x
-        vals = np.asarray(vals)
-        if vals.shape != (s.nnz,):
-            raise ValueError(
-                f"values shape {vals.shape} does not match structure nnz {s.nnz}"
-            )
-        return s, vals
-    if sp.issparse(x):
-        m = sp.csr_matrix(x, copy=True)
-        m.sum_duplicates()
-        m.sort_indices()
-        return SparseStructure.wrap(m), np.asarray(m.data)
-    m = sp.csr_matrix(np.asarray(x))
-    return SparseStructure.wrap(m), np.asarray(m.data)
-
-
-def _owner_slot(local_ids: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
-    """Invert a padded per-device id list into global-id -> (device, slot)
-    lookup arrays (every id appears exactly once by construction)."""
-    dev = np.empty(n, dtype=np.int64)
-    slot = np.empty(n, dtype=np.int64)
-    d, s = np.nonzero(local_ids >= 0)
-    g = local_ids[d, s]
-    dev[g] = d
-    slot[g] = s
-    return dev, slot
-
-
 # -- the compiled executor ---------------------------------------------------
 class CompiledSpGEMM:
     """One AOT-compiled SpGEMM executor: structure work done, values only.
 
     Construction performs every structure-dependent step (scatter-spec
-    build, constant upload, trace, lowering, XLA compile); ``__call__``
+    build, constant upload, trace, lowering, XLA compile) by handing the
+    plan's ``ModelSpec.make_runner`` the operand structures; ``__call__``
     takes nonzero value vectors and returns the executor's device-major
     C shards with no host structure work and no retracing.
     """
@@ -190,95 +169,31 @@ class CompiledSpGEMM:
         self.block = block
         self.backend = backend
         self.c_structure = c_structure
-        p = plan.p
         dt = self.dtype
-        I, K = a_structure.shape
-        Kb, J = b_structure.shape
-        self._I, self._J = I, J
-        ar, ac = a_structure.coo()
-        br, bc = b_structure.coo()
 
-        if plan.model == "rowwise":
-            if len(plan.ownership["a_row"]) != I or len(plan.ownership["b_row"]) != K:
-                raise ValueError("plan was built for different operand shapes")
-            rdev, rslot = _owner_slot(plan.local_ids["a_row"], I)
-            bdev, bslot = _owner_slot(plan.local_ids["b_row"], K)
-            I_max = plan.local_ids["a_row"].shape[1]
-            K_max = plan.local_ids["b_row"].shape[1]
-            a_idx = tuple(jnp.asarray(v) for v in (rdev[ar], rslot[ar], ac))
-            b_idx = tuple(jnp.asarray(v) for v in (bdev[br], bslot[br], bc))
-            step = _exec.make_rowwise_step(plan, mesh, K, J, axis=axis)
-            a_shape, b_shape = (a_structure.nnz,), (b_structure.nnz,)
-
-            def run(a_values, b_values):
-                _mark_trace()
-                a_local = jnp.zeros((p, I_max, K), dt).at[a_idx].set(a_values)
-                b_local = jnp.zeros((p, K_max, J), dt).at[b_idx].set(b_values)
-                return step(a_local, b_local)
-
-        elif plan.model == "outer":
-            if len(plan.ownership["k"]) != K:
-                raise ValueError("plan was built for different operand shapes")
-            kdev, kslot = _owner_slot(plan.local_ids["k"], K)
-            K_max = plan.local_ids["k"].shape[1]
-            a_idx = tuple(jnp.asarray(v) for v in (kdev[ac], ar, kslot[ac]))
-            b_idx = tuple(jnp.asarray(v) for v in (kdev[br], kslot[br], bc))
-            step = _exec.make_outer_step(plan, mesh, I, J, axis=axis)
-            a_shape, b_shape = (a_structure.nnz,), (b_structure.nnz,)
-
-            def run(a_values, b_values):
-                _mark_trace()
-                a_cols = jnp.zeros((p, I, K_max), dt).at[a_idx].set(a_values)
-                b_rows = jnp.zeros((p, K_max, J), dt).at[b_idx].set(b_values)
-                return step(a_cols, b_rows)
-
-        elif plan.model == "fine":
-            nA, nB = a_structure.nnz, b_structure.nnz
-            if nA != len(plan.a_part) or nB != len(plan.b_part):
-                raise ValueError("plan was built for a different nonzero structure")
-            adev, aslot = _owner_slot(plan.local_ids["a_nz"], nA)
-            bdev, bslot = _owner_slot(plan.local_ids["b_nz"], nB)
-            N_a = plan.local_ids["a_nz"].shape[1]
-            N_b = plan.local_ids["b_nz"].shape[1]
-            a_idx = (jnp.asarray(adev), jnp.asarray(aslot))
-            b_idx = (jnp.asarray(bdev), jnp.asarray(bslot))
-            step = _exec.make_fine_step(plan, mesh, axis=axis)
-            a_shape, b_shape = (nA,), (nB,)
-
-            def run(a_values, b_values):
-                _mark_trace()
-                a_own = jnp.zeros((p, N_a), dt).at[a_idx].set(a_values)
-                b_own = jnp.zeros((p, N_b), dt).at[b_idx].set(b_values)
-                return step(a_own, b_own)
-
-        elif plan.model == "monoC":
-            # a_structure / b_structure are the BLOCK structures here; values
-            # are (nnz, block, block) arrays in block CSR (= to_bsr) order
-            nA, nB = a_structure.nnz, b_structure.nnz
-            if nA != len(plan.a_part) or nB != len(plan.b_part):
-                raise ValueError("plan was built for a different block structure")
-            adev, aslot = _owner_slot(plan.local_ids["a_nz"], nA)
-            bdev, bslot = _owner_slot(plan.local_ids["b_nz"], nB)
-            N_a = plan.local_ids["a_nz"].shape[1]
-            N_b = plan.local_ids["b_nz"].shape[1]
-            a_idx = (jnp.asarray(adev), jnp.asarray(aslot))
-            b_idx = (jnp.asarray(bdev), jnp.asarray(bslot))
-            step = _exec.make_monoC_step(
-                plan, mesh, block=block, backend=backend, axes=axes
-            )
-            a_shape, b_shape = (nA, block, block), (nB, block, block)
-            self._I, self._J = I * block, J * block  # padded dense shape
-
-            def run(a_values, b_values):
-                _mark_trace()
-                a_own = jnp.zeros((p, N_a, block, block), dt).at[a_idx].set(a_values)
-                b_own = jnp.zeros((p, N_b, block, block), dt).at[b_idx].set(b_values)
-                return step(a_own, b_own)
-
-        else:
+        spec = get_spec(plan.model)
+        if spec.make_runner is None:
             raise ValueError(f"no runtime lowering for model {plan.model!r}")
+        self.spec = spec
+        setup = spec.make_runner(
+            plan,
+            a_structure,
+            b_structure,
+            mesh,
+            dtype=dt,
+            block=block,
+            backend=backend,
+            axis=axis,
+            axes=axes,
+        )
+        self._I, self._J = setup.out_shape
+        self._a_shape, self._b_shape = setup.a_shape, setup.b_shape
+        run = setup.run
 
-        self._a_shape, self._b_shape = a_shape, b_shape
+        def traced(a_values, b_values):
+            _mark_trace()
+            return run(a_values, b_values)
+
         with warnings.catch_warnings():
             # donation is best-effort: backends without it (CPU) warn per
             # compile, which would spam every cache miss
@@ -286,10 +201,10 @@ class CompiledSpGEMM:
                 "ignore", message="Some donated buffers were not usable"
             )
             self._compiled = (
-                jax.jit(run, donate_argnums=(0, 1))
+                jax.jit(traced, donate_argnums=(0, 1))
                 .lower(
-                    jax.ShapeDtypeStruct(a_shape, dt),
-                    jax.ShapeDtypeStruct(b_shape, dt),
+                    jax.ShapeDtypeStruct(setup.a_shape, dt),
+                    jax.ShapeDtypeStruct(setup.b_shape, dt),
                 )
                 .compile()
             )
@@ -319,20 +234,10 @@ class CompiledSpGEMM:
 
     def unpack(self, c_local) -> np.ndarray:
         """Scatter device-major C shards back to a dense (I, J) array (padded
-        block-grid shape for monoC)."""
-        if self.model == "rowwise":
-            return _exec.unpack_rowwise_result(c_local, self.plan, self._I)
-        if self.model == "outer":
-            return np.asarray(c_local).reshape(-1, self._J)[: self._I]
-        if self.c_structure is None:
+        block-grid shape for monoC) via the model's registered unpacker."""
+        if self.spec.needs_c_structure and self.c_structure is None:
             raise ValueError(f"unpacking a {self.model} result needs c_structure")
-        if self.model == "monoC":
-            return _exec.unpack_monoC_result(
-                c_local, self.plan, self.c_structure, (self._I, self._J)
-            )
-        return _exec.unpack_fine_result(
-            c_local, self.plan, self.c_structure, (self._I, self._J)
-        )
+        return self.spec.unpack(c_local, self.plan, self.c_structure, (self._I, self._J))
 
     @property
     def cost_model_words(self) -> tuple[int, int]:

@@ -21,6 +21,10 @@ Row-wise ships whole dense B rows, so its measured *useful* words match the
 unit-cost prediction while its wire words exceed the nnz-weighted cost; the
 sweep reports both so the gap is visible, as is the padded all_to_all
 overhead for every route.
+
+Everything model-specific (which models lower, how routed words are
+weighted, what mesh/backend an executor wants) comes from the declarative
+``registry.ModelSpec`` table — this module contains no per-model dispatch.
 """
 from __future__ import annotations
 
@@ -28,44 +32,18 @@ import time
 
 import numpy as np
 
-from repro.core import build_model, evaluate, partition
+from repro.core import partition
 from repro.core.spgemm_models import MODELS, SpGEMMInstance
-from repro.distributed.plan_ir import (
-    ExecutionPlan,
-    build_fine_plan,
-    build_monoC_plan,
-    build_outer_plan,
-    build_rowwise_plan,
+from repro.distributed.plan_ir import (  # noqa: F401  (re-export: tests use
+    ExecutionPlan,                       # measured_route_words from here)
     build_volume_plan,
-    derive_owner_from_pins,
+    measured_route_words,
 )
+from repro.distributed.registry import executable_models, get_spec
 
-#: models whose partitions we can lower to an item-granularity executable plan
-EXECUTABLE = ("rowwise", "outer", "monoC", "fine")
-
-
-def measured_route_words(
-    plan: ExecutionPlan, item_words: dict[str, np.ndarray] | None = None
-) -> int:
-    """Words the plan's routing tables actually ship (valid slots only).
-
-    Counted from the materialized ``recv_key`` tables — the executor moves
-    exactly these entries (plus padding) — NOT from the hypergraph's lambda
-    counting, so equality with ``evaluate().connectivity`` is a real check
-    that the cut and the schedule describe the same traffic.  ``item_words``
-    optionally maps a route name to per-global-item useful word counts
-    (e.g. nnz per shipped B row); routes not named count ``word_size`` per
-    item.  Fold-phase words tracked only in ``stats`` (the outer plan's
-    psum_scatter) are added as-is since that phase has no routing table.
-    """
-    words = 0
-    for name, r in plan.routes.items():
-        keys = r.recv_key[r.recv_key >= 0]
-        if item_words is not None and name in item_words:
-            words += int(item_words[name][keys].sum())
-        else:
-            words += len(keys) * r.word_size
-    return int(words + plan.stats.get("fold_words_ideal", 0))
+#: models whose partitions we can lower to an item-granularity executable
+#: plan (derived from the registry — the old hand-maintained tuple is gone)
+EXECUTABLE = executable_models()
 
 
 def build_executable_plan(
@@ -73,90 +51,53 @@ def build_executable_plan(
 ) -> ExecutionPlan | None:
     """Lower a model partition to its executable plan, or None.
 
-    Nonzero ownership is derived from the pins (``derive_owner_from_pins``)
-    so each cut net of connectivity lambda costs exactly lambda - 1 shipped
-    items — the omitted-V^nz reading of the metric — making the planned
-    words comparable with the hypergraph prediction.
+    Pure registry lookup: the per-model lowerers (with their pin-derived
+    ownership — ``derive_owner_from_pins`` — so each cut net of
+    connectivity lambda costs exactly lambda - 1 shipped items) live on the
+    ``ModelSpec`` entries.
     """
-    parts = np.asarray(parts, dtype=np.int64)
-    if model == "rowwise":
-        I, K, _ = inst.shape
-        acsc = inst.a_csc
-        ks = np.repeat(np.arange(K, dtype=np.int64), np.diff(acsc.indptr))
-        b_part = derive_owner_from_pins(
-            ks, parts[acsc.indices.astype(np.int64)], K, p
-        )
-        return build_rowwise_plan(inst, parts, p, b_part=b_part)
-    if model == "outer":
-        return build_outer_plan(inst, parts, p)
-    if model == "monoC":
-        mult_dev = parts[inst.mult_c_pos]
-        a_part = derive_owner_from_pins(inst.mult_a_pos, mult_dev, inst.a.nnz, p)
-        b_part = derive_owner_from_pins(inst.mult_b_pos, mult_dev, inst.b.nnz, p)
-        return build_monoC_plan(inst, parts, p, a_part=a_part, b_part=b_part)
-    if model == "fine":
-        return build_fine_plan(inst, parts, p)
-    return None
+    spec = get_spec(model)
+    if spec.lower is None:
+        return None
+    return spec.lower(inst, np.asarray(parts, dtype=np.int64), p)
 
 
-def _execute(
-    inst: SpGEMMInstance,
-    model: str,
-    plan: ExecutionPlan,
-    a_dense: np.ndarray,
-    b_dense: np.ndarray,
-    want: np.ndarray,
-) -> dict:
-    """Run the executor for ``plan`` on a mesh over this process' devices and
-    report wall time + max error vs the dense oracle ``want`` (computed once
-    per instance by the caller).  Requires the process to own >= plan.p
-    devices (the multi-device CI job forces 8).
+def _execute(handle, a_dense: np.ndarray, b_dense: np.ndarray, want: np.ndarray) -> dict:
+    """Run a planned pipeline's executor on this process' devices and report
+    wall time + max error vs the dense oracle ``want`` (computed once per
+    instance by the caller).  Requires the process to own >= p devices (the
+    multi-device CI job forces 8).
 
-    Goes through the compile-once runtime with values taken straight off the
-    instance structures (no dense -> sparse round trip): ``exec_s`` is the
-    cold cost (structure work + AOT compile + first call), ``exec_warm_us``
-    the steady-state value-only per-call latency the runtime amortizes to.
+    Goes through the ``repro.api`` front door — mesh geometry, value
+    packing, dtype promotion and backend defaults all come from the model's
+    ``ModelSpec`` — with values taken straight off the instance structures
+    (no dense -> sparse round trip): ``exec_s`` is the cold cost (structure
+    work + AOT compile + first call), ``exec_warm_us`` the steady-state
+    value-only per-call latency the runtime amortizes to.
     """
     import jax
-    from jax.sharding import Mesh
 
-    from repro.distributed.runtime import compile_spgemm
-
-    p = plan.p
-    I, _, J = inst.shape
+    inst = handle.instance
     ar, ac = inst.a.coo()
     br, bc = inst.b.coo()
     a_vals = a_dense[ar, ac]
     b_vals = b_dense[br, bc]
-    dtype = np.promote_types(a_vals.dtype, b_vals.dtype)
     t0 = time.time()
-    if model == "monoC":
-        if p % 2:
-            return {"exec": f"skipped (odd p={p}; executor mesh is (2, p//2))"}
-        mesh = Mesh(np.array(jax.devices()[:p]).reshape(2, p // 2), ("x", "y"))
-        # scalar instance == 1x1 block structure; XLA local compute (no TPU)
-        exe = compile_spgemm(
-            plan, inst.a, inst.b, mesh, dtype=dtype, block=1, backend="xla",
-            c_structure=inst.c,
-        )
-        a_vals = a_vals.reshape(-1, 1, 1)
-        b_vals = b_vals.reshape(-1, 1, 1)
-    elif model in ("rowwise", "outer", "fine"):
-        mesh = Mesh(np.array(jax.devices()[:p]), ("x",))
-        exe = compile_spgemm(plan, inst.a, inst.b, mesh, dtype=dtype, c_structure=inst.c)
-    else:
-        return {}
-    got = exe.unpack(jax.block_until_ready(exe(a_vals, b_vals)))
+    exe = handle.compile(dtype=np.promote_types(a_vals.dtype, b_vals.dtype))
+    got = exe(a_vals, b_vals)
     cold_s = time.time() - t0
+    # steady-state timing on the raw runtime executable (device shards out,
+    # no host unpack), matching bench_exec's us_per_call convention
+    a_packed, b_packed = exe.pack(a_vals, b_vals)
     reps = 3
     t0 = time.time()
     for _ in range(reps):
-        jax.block_until_ready(exe(a_vals, b_vals))
+        jax.block_until_ready(exe.runtime(a_packed, b_packed))
     warm_us = (time.time() - t0) / reps * 1e6
     return {
         "exec_s": round(cold_s, 3),
         "exec_warm_us": int(warm_us),
-        "exec_max_err": float(np.abs(got[:I, :J] - want).max()),
+        "exec_max_err": float(np.abs(got - want).max()),
     }
 
 
@@ -179,17 +120,18 @@ def sweep_instance(
     executors when the process owns >= p devices (a no-op otherwise, so the
     sweep is safe in single-device harness runs).
     """
+    from repro.api import PlannedSpGEMM, device_count
+
     records = []
     can_exec = False
     if execute and a_dense is not None:
-        import jax
-
-        can_exec = jax.device_count() >= p
+        can_exec = device_count() >= p
     # the oracle matmul is only worth materializing when executors will run
     want = a_dense @ b_dense if can_exec else None
     for model in models:
+        spec = get_spec(model)
         t0 = time.time()
-        hg = build_model(inst, model)
+        hg = spec.build(inst)
         if pin_cap is not None and hg.n_pins > pin_cap:
             records.append(
                 {
@@ -201,44 +143,51 @@ def sweep_instance(
             )
             continue
         res = partition(hg, p, eps=eps, seed=seed)
-        costs = evaluate(hg, res.parts, p)
+        handle = PlannedSpGEMM(
+            instance=inst,
+            model=model,
+            hypergraph=hg,
+            partition=res,
+            execution_plan=build_executable_plan(inst, model, res.parts, p),
+            eps=eps,
+            seed=seed,
+        )
+        # the handle's cost report is the single source for the per-model
+        # numbers; this sweep only adds the cross-check volume plan, timing,
+        # and (optionally) live execution
+        report = handle.cost_report()
         vol_plan = build_volume_plan(hg, res.parts, p)
         rec = {
             "name": f"{inst.name}/select/{model}/p{p}",
             "model": model,
             "status": "ok",
             "us_per_call": int((time.time() - t0) * 1e6),
-            "n_vertices": hg.n_vertices,
-            "n_pins": hg.n_pins,
-            "predicted_words": int(costs.connectivity),
-            "predicted_max_part": int(costs.max_part_cost),
+            "n_vertices": report["n_vertices"],
+            "n_pins": report["n_pins"],
+            "predicted_words": report["predicted_words"],
+            "predicted_max_part": report["predicted_max_part"],
             "volume_plan_words": vol_plan.comm_words_ideal,
-            "comp_imbalance": round(costs.comp_imbalance, 4),
-            "executable": model in EXECUTABLE,
+            "comp_imbalance": report["comp_imbalance"],
+            "executable": spec.executable,
         }
         assert rec["volume_plan_words"] == rec["predicted_words"], (
             f"{model}: volume plan diverged from connectivity metric"
         )
-        plan = build_executable_plan(inst, model, res.parts, p)
-        if plan is not None:
-            if model == "rowwise":
-                # the route ships whole B rows; nnz-weighting its table
-                # entries recovers the model's useful-word prediction, while
-                # the unit count is the number of row transfers
-                rec["measured_words"] = measured_route_words(
-                    plan, {"expand": inst.b.row_counts()}
-                )
-                rec["measured_items"] = measured_route_words(plan)
-            else:
-                rec["measured_words"] = measured_route_words(plan)
-            rec["padded_words"] = plan.comm_words_padded
+        if handle.execution_plan is not None:
+            # sweep-historical names: measured_* == the report's planned_*
+            rec["measured_words"] = report["planned_words"]
+            if "planned_items" in report:
+                # the unit count is the number of item transfers (e.g. row
+                # shipments); the weighted count above is the useful words
+                rec["measured_items"] = report["planned_items"]
+            rec["padded_words"] = report["padded_words"]
             if execute and a_dense is not None:
                 if can_exec:
-                    rec.update(_execute(inst, model, plan, a_dense, b_dense, want))
+                    rec.update(_execute(handle, a_dense, b_dense, want))
                 else:
-                    import jax
-
-                    rec["exec"] = f"skipped ({jax.device_count()} device(s) < p={p})"
+                    rec["exec"] = (
+                        f"skipped ({device_count()} device(s) < p={p})"
+                    )
         records.append(rec)
     ok = [r for r in records if r["status"] == "ok"]
     if ok:

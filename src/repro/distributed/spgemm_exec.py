@@ -479,7 +479,8 @@ def fine_spgemm(
     (p, C_max + 1); the trailing slot per device is the padding sink.  Use
     ``unpack_fine_result``.  Thin wrapper over the compile-once runtime.
     """
-    from repro.distributed.runtime import compile_spgemm, structure_and_values
+    from repro.distributed.runtime import compile_spgemm
+    from repro.sparse.structure import structure_and_values
 
     a_s, a_vals = structure_and_values(a)
     b_s, b_vals = structure_and_values(b)

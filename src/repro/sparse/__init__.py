@@ -11,6 +11,7 @@ from repro.sparse.structure import (
     from_dense,
     random_structure,
     spgemm_symbolic,
+    structure_and_values,
     nontrivial_multiplications,
 )
 from repro.sparse.bsr import BlockSparse, to_bsr, bsr_to_dense
@@ -21,6 +22,7 @@ __all__ = [
     "from_coo",
     "from_dense",
     "random_structure",
+    "structure_and_values",
     "spgemm_symbolic",
     "nontrivial_multiplications",
     "BlockSparse",

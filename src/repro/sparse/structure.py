@@ -113,6 +113,30 @@ def as_structure(x) -> SparseStructure:
     return from_dense(x)
 
 
+def structure_and_values(x) -> tuple[SparseStructure, np.ndarray]:
+    """Normalize an operand to (structure, values-in-canonical-CSR-order).
+
+    Accepts a dense ndarray, any scipy sparse matrix, or an
+    ``(SparseStructure, values)`` pair whose values already follow the
+    structure's CSR order — sparse callers never round-trip through dense.
+    """
+    if isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], SparseStructure):
+        s, vals = x
+        vals = np.asarray(vals)
+        if vals.shape != (s.nnz,):
+            raise ValueError(
+                f"values shape {vals.shape} does not match structure nnz {s.nnz}"
+            )
+        return s, vals
+    if sp.issparse(x):
+        m = sp.csr_matrix(x, copy=True)
+        m.sum_duplicates()
+        m.sort_indices()
+        return SparseStructure.wrap(m), np.asarray(m.data)
+    m = sp.csr_matrix(np.asarray(x))
+    return SparseStructure.wrap(m), np.asarray(m.data)
+
+
 def random_structure(
     n_rows: int,
     n_cols: int,

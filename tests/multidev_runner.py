@@ -365,6 +365,58 @@ def case_runtime():
     print("OK runtime p=%d traces=%d" % (p, runtime.trace_count()))
 
 
+def case_api():
+    """The repro.api front door: one call from structures to dense C for
+    every executable model — no caller-visible mesh/dtype/model
+    special-casing — plus model="auto" selection and the cost report's
+    predicted == planned identity for the replicated-free models."""
+    import repro
+
+    p = N_DEV
+    rng = np.random.default_rng(11)
+    a_s = random_structure(34, 27, 0.15, rng)
+    b_s = random_structure(27, 31, 0.18, rng)
+    a = _random_valued(a_s, rng)
+    b = _random_valued(b_s, rng)
+    want = a @ b
+    a_vals = a[a_s.coo()]
+    b_vals = b[b_s.coo()]
+    for model in repro.executable_models():
+        handle = repro.plan(a_s, b_s, p=p, model=model)
+        got = handle(a_vals, b_vals)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4, err_msg=model)
+        report = handle.cost_report()
+        if handle.spec.measured == "exact":
+            assert report["planned_words"] == report["predicted_words"], report
+    auto = repro.plan(a_s, b_s, p=p, model="auto")
+    assert auto.model in repro.executable_models()
+    assert sum(r["selected"] for r in auto.selection) == 1
+    assert min(r["predicted_words"] for r in auto.selection) == (
+        auto.cost_report()["predicted_words"]
+    )
+    np.testing.assert_allclose(auto(a_vals, b_vals), want, rtol=1e-4, atol=1e-4)
+    print("OK api p=%d auto=%s" % (p, auto.model))
+
+
+def case_api_odd_p():
+    """monoC through the front door at an ODD p: the registry's (1, p) mesh
+    fallback replaces the old caller-side 'odd p skipped' quirk."""
+    import repro
+
+    p = 3
+    assert N_DEV >= p
+    rng = np.random.default_rng(12)
+    a_s = random_structure(20, 16, 0.2, rng)
+    b_s = random_structure(16, 18, 0.2, rng)
+    a = _random_valued(a_s, rng)
+    b = _random_valued(b_s, rng)
+    handle = repro.plan(a_s, b_s, p=p, model="monoC")
+    devices = jax.devices()[:p]
+    got = handle.compile(devices=devices)(a[a_s.coo()], b[b_s.coo()])
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+    print("OK api_odd_p p=%d" % p)
+
+
 def case_compressed_psum():
     """EF-int8 compressed all-reduce: approximates the exact mean within the
     quantization scale, and error feedback drives the running average of the

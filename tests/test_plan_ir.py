@@ -10,8 +10,8 @@ from repro.distributed import (
     build_monoC_plan,
     build_outer_plan,
     build_rowwise_plan,
-    build_rowwise_plan_loop,
 )
+from repro.distributed.plan import build_rowwise_plan_loop
 from repro.distributed.plan_ir import padded_id_lists, plan_monoC_from_dense
 from repro.kernels.bsr_spgemm import build_pair_lists, build_pair_lists_loop
 from repro.sparse.structure import random_structure
