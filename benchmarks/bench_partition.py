@@ -1,4 +1,4 @@
-"""Partitioner engine benchmark: flat-CSR engine vs retained loop reference.
+"""Partitioner engine benchmark: flat vs loop vs device engines.
 
 Cells (each instance × engine):
 - ``partition/flat`` and ``partition/loop``: end-to-end ``partition()`` wall
@@ -7,8 +7,19 @@ Cells (each instance × engine):
   >= 8x faster than the loop-FM reference at connectivity within 5% (or
   better) and identical balance feasibility.  The quick/smoke grid runs the
   same comparison at reduced size so CI exercises the claim on every PR.
+- ``partition/device`` vs ``partition/flat_x{S}``: the device-engine
+  multi-start acceptance cell.  One batched ``engine="device"`` call (all S
+  seeds refined side by side on device, steady-state — the first call's
+  jit compile is warmed up out of band and amortizes across same-bucket
+  planning calls) against the flat engine's best-of-S sequential seeds,
+  which is the host idiom it replaces.  ``--full`` asserts >= 5x end-to-end
+  with connectivity within 5%.
 - a small structured cell (27-pt stencil rowwise model) so quality is
   checked on mesh-like inputs, not just ER.
+
+Every record carries ``engine`` and ``pins_per_sec`` (hypergraph pins
+planned per wall-second — the partition-throughput headline that
+``check_regression.py`` gates against ``partition_smoke.json``).
 
 Timing is interleaved best-of-``repeats`` per engine (both sides measured
 under the same host conditions, so machine noise cannot tilt the ratio).
@@ -25,6 +36,9 @@ from repro.sparse.structure import random_structure
 
 ACCEPT_SPEEDUP = 8.0
 ACCEPT_CONN = 1.05
+DEVICE_ACCEPT_SPEEDUP = 5.0  # device call vs flat best-of-S multi-start
+DEVICE_ACCEPT_CONN = 1.05
+DEVICE_BENCH_STARTS = 8  # seeds in the multi-start comparison
 
 
 def _er_instance(rows: int, seed: int = 0) -> SpGEMMInstance:
@@ -65,10 +79,12 @@ def _cell(hg, p: int, name: str, repeats: int = 2, eps: float = 0.10) -> list[di
             {
                 "name": f"{name}/partition/{engine}/p{p}",
                 "status": "ok",
+                "engine": engine,
                 "us_per_call": int(t * 1e6),
                 "n_vertices": hg.n_vertices,
                 "n_nets": hg.n_nets,
                 "n_pins": hg.n_pins,
+                "pins_per_sec": int(hg.n_pins / max(t, 1e-9)),
                 "connectivity": int(c),
                 "comp_imbalance": round(float(imb), 4),
                 "speedup_vs_loop": round(speedup, 1),
@@ -79,22 +95,86 @@ def _cell(hg, p: int, name: str, repeats: int = 2, eps: float = 0.10) -> list[di
     return recs
 
 
+def _device_cell(
+    hg,
+    p: int,
+    name: str,
+    repeats: int = 2,
+    eps: float = 0.10,
+    starts: int = DEVICE_BENCH_STARTS,
+) -> list[dict]:
+    """Multi-start acceptance cell: one batched ``engine="device"`` call vs
+    the flat engine's best-of-``starts`` sequential seeds (the host
+    multi-start idiom the device batch replaces)."""
+    partition(hg, p, eps=eps, seed=0, engine="device")  # warm the jit cache
+    best = {"device": float("inf"), "flat": float("inf")}
+    res = {}
+    for _rep in range(repeats):
+        t0 = time.perf_counter()
+        res["device"] = partition(hg, p, eps=eps, seed=0, engine="device")
+        best["device"] = min(best["device"], time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        winner = None
+        for s in range(starts):
+            cand = partition(hg, p, eps=eps, seed=s, engine="flat")
+            if winner is None or cand.connectivity < winner.connectivity:
+                winner = cand
+        res["flat"] = winner
+        best["flat"] = min(best["flat"], time.perf_counter() - t0)
+    speedup = best["flat"] / max(best["device"], 1e-9)
+    conn_ratio = res["device"].connectivity / max(res["flat"].connectivity, 1)
+    recs = []
+    for engine, label in (("device", "device"), ("flat", f"flat_x{starts}")):
+        t = best[engine]
+        imb = evaluate(hg, res[engine].parts, p).comp_imbalance
+        recs.append(
+            {
+                "name": f"{name}/partition/{label}/p{p}",
+                "status": "ok",
+                "engine": engine,
+                "multi_starts": starts,
+                "us_per_call": int(t * 1e6),
+                "n_vertices": hg.n_vertices,
+                "n_nets": hg.n_nets,
+                "n_pins": hg.n_pins,
+                "pins_per_sec": int(hg.n_pins / max(t, 1e-9)),
+                "connectivity": int(res[engine].connectivity),
+                "comp_imbalance": round(float(imb), 4),
+                "speedup_vs_flat_multistart": round(speedup, 2),
+                "conn_vs_flat_multistart": round(conn_ratio, 3),
+            }
+        )
+    return recs
+
+
 def run(out_dir: str | None = None, quick: bool = True) -> list[dict]:
     records = []
     if quick:
-        # 5k rows keeps CI fast but stays on the engine's V-cycle speed
+        # 5k rows keeps CI fast but stays on the engines' V-cycle speed
         # path (instances <= SMALL_DIRECT take the multi-start quality path,
         # which deliberately spends the speedup on connectivity instead)
-        records += _cell(build_model(_er_instance(5_000), "rowwise"), 16, "er5k")
+        er = build_model(_er_instance(5_000), "rowwise")
+        records += _cell(er, 16, "er5k")
     else:
         # the acceptance instance: 10k rows, p=16
-        records += _cell(build_model(_er_instance(10_000), "rowwise"), 16, "er10k")
+        er = build_model(_er_instance(10_000), "rowwise")
+        records += _cell(er, 16, "er10k")
     # small structured quality cell — runs the multi-start quality path, so
     # the interesting column is conn_vs_loop, not the speedup
     a = stencil27(7)
     records += _cell(
         build_model(SpGEMMInstance(a, a, name="stencil7"), "rowwise"), 4, "stencil7"
     )
+    # device multi-start throughput cell on the same ER instance (skipped
+    # gracefully where jax is absent: the driver falls back to flat and the
+    # comparison would be flat-vs-flat noise)
+    try:
+        import repro.core.refine_device  # noqa: F401
+    except ImportError:
+        pass
+    else:
+        name = "er5k" if quick else "er10k"
+        records += _device_cell(er, 16, name)
     if not quick:
         rec = records[0]
         assert rec["balance_feasibility_identical"], "balance feasibility diverged"
@@ -105,6 +185,16 @@ def run(out_dir: str | None = None, quick: bool = True) -> list[dict]:
         assert rec["conn_vs_loop"] <= ACCEPT_CONN, (
             f"flat connectivity {rec['conn_vs_loop']}x the loop reference "
             f"(acceptance: <= {ACCEPT_CONN})"
+        )
+        dev = [r for r in records if r.get("engine") == "device"]
+        assert dev, "device acceptance cell missing (jax unavailable?)"
+        assert dev[0]["speedup_vs_flat_multistart"] >= DEVICE_ACCEPT_SPEEDUP, (
+            f"device engine only {dev[0]['speedup_vs_flat_multistart']}x the "
+            f"flat multi-start on er10k (acceptance: >= {DEVICE_ACCEPT_SPEEDUP}x)"
+        )
+        assert dev[0]["conn_vs_flat_multistart"] <= DEVICE_ACCEPT_CONN, (
+            f"device connectivity {dev[0]['conn_vs_flat_multistart']}x the "
+            f"flat multi-start winner (acceptance: <= {DEVICE_ACCEPT_CONN})"
         )
     if out_dir and not quick:
         # only the full acceptance run refreshes the committed artifact;

@@ -10,8 +10,10 @@ hot-path regression does.
 Cells are compared by name; only ``status == ok`` cells with a timing above
 ``--min-us`` on both sides participate (micro-cells are timer noise).
 Quality metrics ride along: a cell whose ``connectivity`` worsens by more
-than the tolerance also fails — the gate guards the speed/quality claim of
-the partitioner, not just wall time.
+than the tolerance also fails, and a cell whose ``pins_per_sec`` planning
+throughput drops below the machine-scaled baseline floor fails too — the
+gate guards the speed/quality claim of the partitioner (including the
+device engine's throughput headline), not just wall time.
 
 CI usage:
     PYTHONPATH=src:. python benchmarks/check_regression.py partition plan
@@ -139,6 +141,15 @@ def check(suite: str, tolerance: float, min_us: int, cur_cal: int) -> list[str]:
                 failures.append(
                     f"{rec['name']}: connectivity {rec['connectivity']} > "
                     f"baseline {ref['connectivity']} * {1 + tolerance}"
+                )
+        # partition-throughput ride-along (device-engine headline): the same
+        # machine factor that relaxes the timing gate lowers the floor here
+        if ref.get("pins_per_sec") and min(cur_us, base_us) >= min_us:
+            floor = ref["pins_per_sec"] / factor / (1 + tolerance)
+            if rec.get("pins_per_sec", 0) < floor:
+                failures.append(
+                    f"{rec['name']}: pins_per_sec {rec.get('pins_per_sec', 0)} "
+                    f"< floor {int(floor)} (baseline {ref['pins_per_sec']})"
                 )
     return failures
 

@@ -93,23 +93,39 @@ def perf_rows(dryrun_dir: str) -> str:
 
 
 def partition_table(paper_dir: str) -> str:
-    """Flat-CSR engine vs loop reference (benchmarks/bench_partition.py)."""
+    """Engine comparison table (benchmarks/bench_partition.py): flat vs loop
+    vs device, with pins/sec planning throughput so the trajectory across
+    PRs is visible straight from partition.json."""
     path = os.path.join(paper_dir, "partition.json")
     if not os.path.exists(path):
         return "(no partition.json — run `python benchmarks/bench_partition.py --full --out experiments/paper`)"
     rows = []
     for rec in json.load(open(path)):
         if rec.get("status") != "ok":
-            rows.append(f"| {rec['name']} | skip | {rec.get('reason','')} | | | |")
+            rows.append(f"| {rec['name']} | skip | {rec.get('reason','')} | | | | | |")
             continue
+        pins_per_sec = rec.get("pins_per_sec")
+        throughput = f"{pins_per_sec/1e6:.2f} Mpins/s" if pins_per_sec else ""
+        # each cell family carries the speedup/quality ratio against its own
+        # reference: loop-FM for the host engines, best-of-S sequential flat
+        # multi-start for the device engine
+        if "speedup_vs_loop" in rec:
+            speedup, conn_vs = f"{rec['speedup_vs_loop']}x", rec["conn_vs_loop"]
+        elif "speedup_vs_flat_multistart" in rec:
+            speedup = f"{rec['speedup_vs_flat_multistart']}x"
+            conn_vs = rec["conn_vs_flat_multistart"]
+        else:
+            speedup, conn_vs = "", ""
         rows.append(
-            f"| {rec['name']} | {rec['us_per_call']/1e6:.3f} s | "
+            f"| {rec['name']} | {rec.get('engine', '')} | "
+            f"{rec['us_per_call']/1e6:.3f} s | {throughput} | "
             f"{rec['connectivity']} | {rec['comp_imbalance']:.3f} | "
-            f"{rec['speedup_vs_loop']}x | {rec['conn_vs_loop']} |"
+            f"{speedup} | {conn_vs} |"
         )
     head = (
-        "| cell | partition s | connectivity | imbalance | flat speedup | conn vs loop |\n"
-        "|---|---|---|---|---|---|"
+        "| cell | engine | partition s | throughput | connectivity | "
+        "imbalance | speedup vs ref | conn vs ref |\n"
+        "|---|---|---|---|---|---|---|---|"
     )
     return head + "\n" + "\n".join(rows)
 

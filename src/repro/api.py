@@ -265,11 +265,17 @@ class PlannedSpGEMM:
 # the front door
 # ---------------------------------------------------------------------------
 def _plan_one(
-    inst: SpGEMMInstance, model: str, p: int, eps: float, seed: int, include_nz: bool
+    inst: SpGEMMInstance,
+    model: str,
+    p: int,
+    eps: float,
+    seed: int,
+    include_nz: bool,
+    engine: str = "flat",
 ) -> PlannedSpGEMM:
     spec = get_spec(model)
     hg = spec.build(inst, include_nz=include_nz)
-    res = _partition(hg, p, eps=eps, seed=seed)
+    res = _partition(hg, p, eps=eps, seed=seed, engine=engine)
     plan_obj = None
     if spec.lower is not None and (not include_nz or spec.lower_include_nz):
         plan_obj = spec.lower(inst, res.parts, p)
@@ -293,6 +299,7 @@ def plan(
     seed: int = 0,
     name: str = "",
     include_nz: bool = False,
+    engine: str = "flat",
 ) -> PlannedSpGEMM:
     """Plan a distributed SpGEMM: model the instance, partition, lower.
 
@@ -308,6 +315,10 @@ def plan(
     ``include_nz`` keeps the V^nz nonzero vertices (Sec. 4 reading); the
     partitioner then places them too, and the handle stays cost/analysis-
     only unless the model's lowerer understands such partitions (fine does).
+    ``engine`` selects the partitioner engine (``"flat"`` host default,
+    ``"device"`` for the batched jax engine above its size threshold,
+    ``"loop"`` for the per-move reference — see DESIGN.md §6); it changes
+    planning *speed*, not the plan contract.
     """
     if isinstance(A, SpGEMMInstance):
         if B is not None:
@@ -320,9 +331,10 @@ def plan(
     if model != "auto":
         if model not in MODELS:
             raise ValueError(f"unknown model {model!r}; choose from {MODELS} or 'auto'")
-        return _plan_one(inst, model, p, eps, seed, include_nz)
+        return _plan_one(inst, model, p, eps, seed, include_nz, engine)
     candidates = [
-        _plan_one(inst, m, p, eps, seed, include_nz) for m in executable_models()
+        _plan_one(inst, m, p, eps, seed, include_nz, engine)
+        for m in executable_models()
     ]
     records = []
     for cand in candidates:

@@ -23,7 +23,7 @@ from repro.core.hypergraph import Hypergraph
 def _net_part_counts(hg: Hypergraph, parts: np.ndarray, p: int) -> sp.csr_matrix:
     """(n_nets x p) matrix of per-net pin counts per part."""
     pin_parts = parts[hg.net_pins]
-    net_ids = np.repeat(np.arange(hg.n_nets, dtype=np.int64), hg.net_sizes())
+    net_ids = hg.pin_nets()  # cached on the hypergraph, like incidence()
     m = sp.coo_matrix(
         (np.ones(hg.n_pins, dtype=np.int64), (net_ids, pin_parts)),
         shape=(hg.n_nets, p),

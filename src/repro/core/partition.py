@@ -12,7 +12,7 @@ PaToH stand-in: recursive bisection with
 subject to w_comp(V_i) <= (1 + eps) * W / p (Def. 4.4 with delta = p - 1,
 matching the paper's experiments).
 
-Two engines share this driver (DESIGN.md §6):
+Three engines share this driver (DESIGN.md §6):
 
 - ``engine="flat"`` (default): the flat-CSR refinement engine in
   ``core/refine.py`` — gain-bucket FM, vectorized frontier growth, star
@@ -23,6 +23,13 @@ Two engines share this driver (DESIGN.md §6):
   convention).  ``benchmarks/bench_partition.py`` measures the speedup and
   ``tests/test_partition_invariants.py`` gates the flat engine on
   equal-or-better connectivity at equal balance feasibility.
+- ``engine="device"``: the batched jax label-propagation engine in
+  ``core/refine_device.py``.  The host still owns the V-cycle; the
+  per-level refinement and the whole multi-start batch run in one jitted
+  device call per level, then the best seed gets one host ``kway_refine``
+  polish.  Below ``DEVICE_MIN_VERTICES`` the host quality path stays
+  authoritative; with jax unavailable the driver falls back to ``"flat"``
+  (planning imports stay jax-free — PR 5's lazy-import contract).
 
 Engineering notes (documented, standard heuristics):
 - nets larger than ``BIG_NET`` pins are ignored during clustering and their
@@ -35,6 +42,8 @@ Engineering notes (documented, standard heuristics):
 from __future__ import annotations
 
 import dataclasses
+import importlib
+import warnings
 from collections import deque
 
 import numpy as np
@@ -53,6 +62,9 @@ MAX_MOVES_PER_PASS = 1200  # loop-engine FM candidate cap
 SMALL_DIRECT = 4096  # below this, the flat engine runs full per-bisection
 # multilevel (quality path); above it, one shared V-cycle (speed path)
 SMALL_STARTS = 4  # independent starts on the quality path (best kept)
+DEVICE_MIN_VERTICES = SMALL_DIRECT  # below this the device engine defers to
+# the host quality path (kernel launch + padding overheads dominate there);
+# tests monkeypatch this to 0 to exercise the kernel on small instances
 
 
 @dataclasses.dataclass
@@ -557,6 +569,61 @@ def _recursive_bisection(
     return parts
 
 
+def _global_vcycle(
+    hg: Hypergraph, p: int, part_cap: float
+) -> tuple[list[tuple[Hypergraph, np.ndarray]], Hypergraph]:
+    """The shared global V-cycle of the speed paths: cluster caps stay well
+    under a part so the coarse initial partitions can still balance.  Returns
+    (levels fine-to-coarse, coarsest hypergraph)."""
+    total = float(hg.w_comp.sum())
+    cluster_cap = max(min(total / 10, part_cap / 4), float(hg.w_comp.max()))
+    glob_target = max(256, 16 * p)
+    levels: list[tuple[Hypergraph, np.ndarray]] = []
+    cur = hg
+    while cur.n_vertices > glob_target:
+        cmap = _cluster_vertices(cur, max_weight=cluster_cap)
+        nxt, n_coarse = _coarsen(cur, cmap, big_net_cap=BIG_NET)
+        # a nearly-stalled level buys no structure but costs a cluster +
+        # K-way pass each; 0.8 keeps only useful levels
+        if n_coarse >= cur.n_vertices * 0.8:
+            break
+        levels.append((cur, cmap))
+        cur = nxt
+    return levels, cur
+
+
+def _partition_device(
+    hg: Hypergraph, p: int, part_cap: float, seed: int, rd
+) -> np.ndarray:
+    """Device-engine driver: host V-cycle + batched multi-seed device
+    refinement at every level + best-seed host polish.
+
+    The whole multi-start batch (``rd.DEVICE_STARTS`` seeds) moves through
+    the V-cycle side by side: many LP rounds at the coarsest level where
+    pins are fewest, tapering toward the finest.  Seeds are compared on the
+    device score (filtered-net connectivity + infeasibility penalty) and
+    only the winner pays the host ``kway_refine`` polish — which also
+    restores exactness for the big nets the device view filters out."""
+    levels, cur = _global_vcycle(hg, p, part_cap)
+    batch = rd.initial_partitions(cur, p, seed)
+    # sub-threshold instances only reach this path when tests force the
+    # engine; rounds are nearly free at those sizes (and when the V-cycle
+    # found no hierarchy, LP does all the work), so trade rounds for quality
+    boost = 3 if (not levels or hg.n_vertices <= SMALL_DIRECT) else 1
+    batch, scores = rd.refine_batch(
+        cur, batch, p, part_cap, boost * rd.ROUNDS_COARSE, seed=seed, salt=0
+    )
+    n_lv = len(levels)
+    for li, (fine, cmap) in enumerate(reversed(levels)):
+        batch = batch[:, cmap]
+        rounds = rd.ROUNDS_FINE if li == n_lv - 1 else rd.ROUNDS_MID
+        batch, scores = rd.refine_batch(
+            fine, batch, p, part_cap, boost * rounds, seed=seed, salt=li + 1
+        )
+    parts = batch[int(np.argmin(scores))].astype(np.int64)
+    return kway_refine(hg, parts, p, part_cap)
+
+
 def partition(
     hg: Hypergraph,
     p: int,
@@ -577,11 +644,34 @@ def partition(
     ``engine="loop"`` is the retained per-move reference implementation:
     recursive bisection directly on the fine hypergraph, re-coarsening each
     subproblem with pairwise matching.
+
+    ``engine="device"`` batches the whole multi-start search into one jitted
+    jax call per V-cycle level (``core/refine_device.py``); sizes at or
+    below ``DEVICE_MIN_VERTICES`` use the flat quality path unchanged, and a
+    missing jax degrades to ``engine="flat"`` with a warning.
     """
     from repro.core.comm import evaluate
 
-    if engine not in ("flat", "loop"):
+    if engine not in ("flat", "loop", "device"):
         raise ValueError(f"unknown partition engine {engine!r}")
+    if engine == "device":
+        rd = None
+        if hg.n_vertices > DEVICE_MIN_VERTICES and p > 1:
+            try:
+                rd = importlib.import_module("repro.core.refine_device")
+            except ImportError:
+                warnings.warn(
+                    "engine='device' needs jax; falling back to engine='flat'",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+        if rd is not None:
+            total = float(hg.w_comp.sum())
+            part_cap = max((1 + eps) * total / p, float(hg.w_comp.max()))
+            parts = _partition_device(hg, p, part_cap, seed, rd)
+            conn = evaluate(hg, parts, p).connectivity
+            return PartitionResult(parts=parts, p=p, connectivity=conn)
+        engine = "flat"
     rng = np.random.default_rng(seed)
     parts = np.zeros(hg.n_vertices, dtype=np.int64)
     if p > 1 and hg.n_vertices:
@@ -590,21 +680,8 @@ def partition(
         total = float(hg.w_comp.sum())
         part_cap = max((1 + eps) * total / p, float(hg.w_comp.max()))
         if engine == "flat" and hg.n_vertices > SMALL_DIRECT:
-            # speed path: one shared global V-cycle; cluster caps stay well
-            # under a part so the coarse bisections can still balance
-            cluster_cap = max(min(total / 10, part_cap / 4), float(hg.w_comp.max()))
-            glob_target = max(256, 16 * p)
-            levels: list[tuple[Hypergraph, np.ndarray]] = []
-            cur = hg
-            while cur.n_vertices > glob_target:
-                cmap = _cluster_vertices(cur, max_weight=cluster_cap)
-                nxt, n_coarse = _coarsen(cur, cmap, big_net_cap=BIG_NET)
-                # a nearly-stalled level buys no structure but costs a
-                # cluster + K-way pass each; 0.8 keeps only useful levels
-                if n_coarse >= cur.n_vertices * 0.8:
-                    break
-                levels.append((cur, cmap))
-                cur = nxt
+            # speed path: one shared global V-cycle
+            levels, cur = _global_vcycle(hg, p, part_cap)
             parts_cur = _recursive_bisection(
                 cur, p, part_cap, rng, engine, multilevel=False
             )

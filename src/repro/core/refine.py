@@ -437,8 +437,16 @@ def kway_refine(
         mv_t = np.array(applied_t, dtype=np.int64)
         parts[mv] = mv_t
         nets_cat, rep = gather_pins(vptr, vnets, mv)
-        np.add.at(cnt, (nets_cat, np.repeat(np.array(applied_s), rep)), -1)
-        np.add.at(cnt, (nets_cat, np.repeat(mv_t, rep)), 1)
+        # flat bincount deltas instead of np.add.at: add.at is numpy's
+        # slowest scatter idiom (unbuffered per-element dispatch), while one
+        # bincount over linearized (net, part) indices is a single C pass
+        flat = nets_cat * p
+        dec = np.bincount(
+            flat + np.repeat(np.array(applied_s, dtype=np.int64), rep),
+            minlength=hg.n_nets * p,
+        )
+        inc2 = np.bincount(flat + np.repeat(mv_t, rep), minlength=hg.n_nets * p)
+        cnt += (inc2 - dec).reshape(hg.n_nets, p).astype(np.int32)
         part_w = np.asarray(part_w_l)
         if improved < 0.05 * first_improved and not (part_w > part_cap).any():
             break  # converged: late rounds buy <5% of the first round's gain

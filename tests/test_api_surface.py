@@ -38,7 +38,7 @@ def test_every_exported_name_resolves():
 def test_plan_signature_is_pinned():
     sig = inspect.signature(repro.plan)
     assert list(sig.parameters) == [
-        "A", "B", "p", "model", "eps", "seed", "name", "include_nz",
+        "A", "B", "p", "model", "eps", "seed", "name", "include_nz", "engine",
     ]
     defaults = {
         k: v.default
@@ -53,6 +53,7 @@ def test_plan_signature_is_pinned():
         "seed": 0,
         "name": "",
         "include_nz": False,
+        "engine": "flat",
     }
 
 
