@@ -29,8 +29,8 @@ import time
 import numpy as np
 
 BASELINE_DIR = os.path.join("experiments", "baselines")
-SUITES = ("partition", "plan", "exec")
-MIN_US = {"partition": 5_000, "plan": 2_500, "exec": 1_000}
+SUITES = ("partition", "plan", "exec", "session")
+MIN_US = {"partition": 5_000, "plan": 2_500, "exec": 1_000, "session": 2_000}
 # per-suite slowdown allowance overriding the CLI/global default: exec cells
 # time multi-host-device collectives whose scheduling jitter is far above
 # the numpy suites' (2-3x between runs on a contended machine), while the
@@ -56,6 +56,13 @@ def _suite_records(suite: str) -> list[dict]:
         # steady-state executor cells (needs forced host devices >= 4, the
         # multidev CI job; single-device runs emit only skip cells)
         from benchmarks.bench_exec import run
+
+        return run(out_dir=None, quick=True)
+    if suite == "session":
+        # the gated cell (session/warm_replan) is planning-only numpy; the
+        # session_exec cells ride along ungated (the "exec" name filter
+        # below) but still assert their own floors when devices allow
+        from benchmarks.bench_session import run
 
         return run(out_dir=None, quick=True)
     raise ValueError(f"unknown suite {suite!r}; choose from {SUITES}")

@@ -54,6 +54,7 @@ __all__ = [
     "PlannedSpGEMM",
     "device_count",
     "plan",
+    "session",
 ]
 
 
@@ -78,12 +79,20 @@ class CompiledSpGEMM:
     device-shard interface stays available as ``.runtime``.
     """
 
-    def __init__(self, planned: "PlannedSpGEMM", runtime_exe, spec: ModelSpec):
+    def __init__(
+        self,
+        planned: "PlannedSpGEMM",
+        runtime_exe,
+        spec: ModelSpec,
+        out_shape: tuple[int, int] | None = None,
+    ):
         self.planned = planned
         self.runtime = runtime_exe
         self.spec = spec
-        I, _, J = planned.instance.shape
-        self._out = (I, J)
+        if out_shape is None:
+            I, _, J = planned.instance.shape
+            out_shape = (I, J)
+        self._out = tuple(out_shape)
 
     @property
     def mesh(self):
@@ -272,10 +281,20 @@ def _plan_one(
     seed: int,
     include_nz: bool,
     engine: str = "flat",
+    warm_start: np.ndarray | None = None,
+    warm_drift_limit: float = 0.5,
 ) -> PlannedSpGEMM:
     spec = get_spec(model)
     hg = spec.build(inst, include_nz=include_nz)
-    res = _partition(hg, p, eps=eps, seed=seed, engine=engine)
+    res = _partition(
+        hg,
+        p,
+        eps=eps,
+        seed=seed,
+        engine=engine,
+        warm_start=warm_start,
+        warm_drift_limit=warm_drift_limit,
+    )
     plan_obj = None
     if spec.lower is not None and (not include_nz or spec.lower_include_nz):
         plan_obj = spec.lower(inst, res.parts, p)
@@ -350,3 +369,38 @@ def plan(
     chosen = candidates[best]
     chosen.selection = records
     return chosen
+
+
+def session(
+    p: int = 8,
+    model: str = "auto",
+    eps: float = 0.10,
+    seed: int = 0,
+    engine: str = "flat",
+    store_dir: str | None = None,
+    policy=None,
+    **kwargs,
+):
+    """A resilient handle for iterated, structure-drifting SpGEMM.
+
+    ``repro.session(p=8)`` returns a ``SpGEMMSession``: call it like
+    ``plan(...)`` would be called per structure, but across a loop —
+    ``sess.multiply(A, B)`` fingerprints the operands, reuses the warm
+    executor when the structure is unchanged, warm-start-replans on drift,
+    persists plans under ``store_dir`` (a restarted session rebuilds its
+    pool from there), and retries/downgrades through ``policy`` (a
+    ``repro.FaultPolicy``) on stage failures.  See
+    ``repro.distributed.session`` for the full contract.
+    """
+    from repro.distributed.session import SpGEMMSession
+
+    return SpGEMMSession(
+        p=p,
+        model=model,
+        eps=eps,
+        seed=seed,
+        engine=engine,
+        store_dir=store_dir,
+        policy=policy,
+        **kwargs,
+    )

@@ -1,3 +1,25 @@
-from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.store import (
+    PLAN_STORE_VERSION,
+    PlanStoreError,
+    RestoredPlan,
+    latest_step,
+    list_plans,
+    quarantine_plan,
+    restore_checkpoint,
+    restore_plan,
+    save_checkpoint,
+    save_plan,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "PLAN_STORE_VERSION",
+    "PlanStoreError",
+    "RestoredPlan",
+    "latest_step",
+    "list_plans",
+    "quarantine_plan",
+    "restore_checkpoint",
+    "restore_plan",
+    "save_checkpoint",
+    "save_plan",
+]

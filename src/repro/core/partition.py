@@ -72,6 +72,20 @@ class PartitionResult:
     parts: np.ndarray  # (n_vertices,) int64 part ids
     p: int
     connectivity: int  # final objective value
+    warm: bool = False  # produced by the warm-start path (label reuse)
+
+
+# device-engine fallback reasons already warned about (warn once per reason
+# per process, not once per call — a drifting-structure session replans many
+# times and must not spam); tests clear this to re-arm the warning
+_FALLBACK_WARNED: set[str] = set()
+
+
+def _warn_fallback(reason: str, message: str) -> None:
+    if reason in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(reason)
+    warnings.warn(message, RuntimeWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -624,12 +638,50 @@ def _partition_device(
     return kway_refine(hg, parts, p, part_cap)
 
 
+def _warm_partition(
+    hg: Hypergraph, p: int, part_cap: float, labels: np.ndarray, drift_limit: float
+) -> np.ndarray | None:
+    """Warm-start K-way partition from a previous run's labels.
+
+    ``labels`` is aligned to this hypergraph's vertices; entries outside
+    ``[0, p)`` mark vertices the caller could not map from the old structure
+    (new rows/mults after drift).  Unmapped vertices are placed
+    heaviest-first onto the lightest part, then one ``kway_refine`` polish
+    repairs the boundary the drift disturbed.  Returns ``None`` — caller
+    falls back to cold partitioning — when drift exceeds ``drift_limit`` or
+    the polished result is balance-infeasible (reusing labels would then
+    cost more than it saves)."""
+    labels = np.asarray(labels, dtype=np.int64).ravel()
+    if labels.shape != (hg.n_vertices,):
+        return None
+    invalid = (labels < 0) | (labels >= p)
+    if float(invalid.mean()) > drift_limit:
+        return None
+    parts = labels.copy()
+    miss = np.flatnonzero(invalid)
+    w = hg.w_comp.astype(np.float64)
+    if len(miss):
+        part_w = np.bincount(parts[~invalid], weights=w[~invalid], minlength=p)
+        order = miss[np.argsort(-w[miss], kind="stable")]
+        for v in order.tolist():
+            t = int(np.argmin(part_w))
+            parts[v] = t
+            part_w[t] += w[v]
+    parts = kway_refine(hg, parts, p, part_cap)
+    part_w = np.bincount(parts, weights=w, minlength=p)
+    if part_w.max() > part_cap + 1e-9:
+        return None
+    return parts
+
+
 def partition(
     hg: Hypergraph,
     p: int,
     eps: float = 0.03,
     seed: int = 0,
     engine: str = "flat",
+    warm_start: np.ndarray | None = None,
+    warm_drift_limit: float = 0.5,
 ) -> PartitionResult:
     """K-way partition via recursive bisection (+ a direct K-way pass).
 
@@ -648,29 +700,59 @@ def partition(
     ``engine="device"`` batches the whole multi-start search into one jitted
     jax call per V-cycle level (``core/refine_device.py``); sizes at or
     below ``DEVICE_MIN_VERTICES`` use the flat quality path unchanged, and a
-    missing jax degrades to ``engine="flat"`` with a warning.
+    missing (or failing) jax degrades to ``engine="flat"`` with a
+    once-per-process warning.
+
+    ``warm_start``: previous labels aligned to this hypergraph's vertices
+    (entries outside ``[0, p)`` = unmapped after drift).  When reuse is
+    viable (drift under ``warm_drift_limit`` and the polished result
+    feasible) the returned result has ``warm=True`` and skipped the full
+    multilevel search; otherwise cold partitioning runs with the requested
+    engine.
     """
     from repro.core.comm import evaluate
+    from repro.testing import faults
 
+    faults.fire("partition")
     if engine not in ("flat", "loop", "device"):
         raise ValueError(f"unknown partition engine {engine!r}")
+    if warm_start is not None and hg.n_vertices:
+        if p == 1:
+            parts = np.zeros(hg.n_vertices, dtype=np.int64)
+            conn = evaluate(hg, parts, p).connectivity
+            return PartitionResult(parts=parts, p=p, connectivity=conn, warm=True)
+        total = float(hg.w_comp.sum())
+        part_cap = max((1 + eps) * total / p, float(hg.w_comp.max()))
+        parts = _warm_partition(hg, p, part_cap, warm_start, warm_drift_limit)
+        if parts is not None:
+            conn = evaluate(hg, parts, p).connectivity
+            return PartitionResult(parts=parts, p=p, connectivity=conn, warm=True)
     if engine == "device":
         rd = None
         if hg.n_vertices > DEVICE_MIN_VERTICES and p > 1:
             try:
                 rd = importlib.import_module("repro.core.refine_device")
             except ImportError:
-                warnings.warn(
+                _warn_fallback(
+                    "import",
                     "engine='device' needs jax; falling back to engine='flat'",
-                    RuntimeWarning,
-                    stacklevel=2,
                 )
         if rd is not None:
             total = float(hg.w_comp.sum())
             part_cap = max((1 + eps) * total / p, float(hg.w_comp.max()))
-            parts = _partition_device(hg, p, part_cap, seed, rd)
-            conn = evaluate(hg, parts, p).connectivity
-            return PartitionResult(parts=parts, p=p, connectivity=conn)
+            try:
+                parts = _partition_device(hg, p, part_cap, seed, rd)
+            except Exception as exc:
+                # device-runtime failure (OOM, kernel error): the host flat
+                # engine is the authoritative fallback, not a hard stop
+                _warn_fallback(
+                    "runtime",
+                    f"engine='device' failed ({exc!r}); "
+                    "falling back to engine='flat'",
+                )
+            else:
+                conn = evaluate(hg, parts, p).connectivity
+                return PartitionResult(parts=parts, p=p, connectivity=conn)
         engine = "flat"
     rng = np.random.default_rng(seed)
     parts = np.zeros(hg.n_vertices, dtype=np.int64)

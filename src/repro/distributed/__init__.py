@@ -19,6 +19,7 @@ import importlib
 
 __all__ = [
     "CompiledSpGEMM",
+    "SpGEMMSession",
     "compile_spgemm",
     "ExecutionPlan",
     "Route",
@@ -71,6 +72,7 @@ _HOME = {
         "get_spec",
     ),
     "repro.distributed.runtime": ("CompiledSpGEMM", "compile_spgemm"),
+    "repro.distributed.session": ("SpGEMMSession",),
     "repro.distributed.spgemm_exec": (
         "fine_spgemm",
         "monoC_spgemm",

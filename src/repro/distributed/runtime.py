@@ -55,7 +55,12 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.distributed.registry import get_spec
-from repro.sparse.structure import SparseStructure, structure_and_values
+from repro.sparse.structure import (
+    SparseStructure,
+    structure_and_values,
+    structure_fingerprint,
+)
+from repro.testing import faults
 
 __all__ = [
     "CompiledSpGEMM",
@@ -109,18 +114,6 @@ def plan_fingerprint(plan) -> str:
     return fp
 
 
-def structure_fingerprint(s: SparseStructure) -> str:
-    """Content hash of a nonzero structure, memoized on the object."""
-    fp = s.__dict__.get("_fingerprint")
-    if fp is None:
-        h = hashlib.sha1(f"{s.shape}".encode())
-        h.update(np.ascontiguousarray(s.indptr))
-        h.update(np.ascontiguousarray(s.indices))
-        fp = h.hexdigest()
-        object.__setattr__(s, "_fingerprint", fp)  # frozen dataclass
-    return fp
-
-
 def _mesh_key(mesh: Mesh) -> tuple:
     return (
         tuple(mesh.axis_names),
@@ -154,6 +147,7 @@ class CompiledSpGEMM:
         axes: tuple[str, str] = ("x", "y"),
         c_structure: SparseStructure | None = None,
     ):
+        faults.fire("compile")
         if mesh.devices.size != plan.p:
             raise ValueError(
                 f"plan is for p={plan.p} but mesh has {mesh.devices.size} devices"
@@ -228,6 +222,7 @@ class CompiledSpGEMM:
         """Value-only update: returns device-major C shards (the same layout
         the underlying ``*_spgemm`` executor returns).  Passing a jax.Array
         transfers ownership of its buffer (donation)."""
+        faults.fire("execute")
         a = self._coerce(a_values, self._a_shape, "A")
         b = self._coerce(b_values, self._b_shape, "B")
         return self._compiled(a, b)

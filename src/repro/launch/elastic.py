@@ -18,6 +18,7 @@ import time
 from typing import Callable
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.resilience import RetryableError, is_retryable
 
 
 @dataclasses.dataclass
@@ -28,7 +29,7 @@ class RunStats:
     step_times: list = dataclasses.field(default_factory=list)
 
 
-class InjectedFailure(RuntimeError):
+class InjectedFailure(RetryableError):
     """Simulated node failure (tests)."""
 
 
@@ -43,8 +44,18 @@ def run_loop(
     straggler_factor: float = 3.0,
     state_to_tree: Callable = lambda s: s,
     tree_to_state: Callable = lambda t, s: t,
+    retryable: Callable[[BaseException], bool] = is_retryable,
+    restart_backoff_s: float = 0.0,
+    restart_backoff_factor: float = 2.0,
+    sleep: Callable = time.sleep,
 ) -> tuple[object, RunStats]:
-    """Checkpointed, restartable step loop."""
+    """Checkpointed, restartable step loop.
+
+    Restarts only on ``retryable`` failures (``resilience.is_retryable`` by
+    default — the predicate ``FaultPolicy`` shares, replacing the old
+    ``"RESOURCE_EXHAUSTED"`` substring match), waiting ``restart_backoff_s``
+    (doubled per consecutive restart) before each restart so a crash-looping
+    resource isn't hammered."""
     stats = RunStats()
     start = 0
     if ckpt_dir is not None and latest_step(ckpt_dir) is not None:
@@ -52,6 +63,7 @@ def run_loop(
         state = tree_to_state(tree, state)
     step = start
     restarts = 0
+    backoff = restart_backoff_s
     while step < n_steps:
         try:
             t0 = time.monotonic()
@@ -65,23 +77,26 @@ def run_loop(
                 stats.stragglers.append((step, dt, med))
             step += 1
             stats.steps_run += 1
+            backoff = restart_backoff_s  # a completed step resets the backoff
             if ckpt_dir is not None and (
                 step % ckpt_every == 0 or step == n_steps
             ):
                 save_checkpoint(ckpt_dir, step, state_to_tree(state))
-        except (InjectedFailure, RuntimeError) as e:
-            if isinstance(e, InjectedFailure) or "RESOURCE_EXHAUSTED" in str(e):
-                restarts += 1
-                stats.restarts = restarts
-                if restarts > max_restarts:
-                    raise
-                if ckpt_dir is None:
-                    raise
-                if latest_step(ckpt_dir) is not None:
-                    tree, step = restore_checkpoint(ckpt_dir)
-                    state = tree_to_state(tree, state)
-                else:
-                    step = 0
-            else:
+        except Exception as e:
+            if not retryable(e):
                 raise
+            restarts += 1
+            stats.restarts = restarts
+            if restarts > max_restarts:
+                raise
+            if ckpt_dir is None:
+                raise
+            if backoff > 0:
+                sleep(backoff)
+                backoff *= restart_backoff_factor
+            if latest_step(ckpt_dir) is not None:
+                tree, step = restore_checkpoint(ckpt_dir)
+                state = tree_to_state(tree, state)
+            else:
+                step = 0
     return state, stats

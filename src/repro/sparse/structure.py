@@ -7,6 +7,7 @@ immutable wrapper around a deduplicated, sorted boolean CSR matrix.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 import scipy.sparse as sp
@@ -90,6 +91,22 @@ class SparseStructure:
             and np.array_equal(self.indptr, other.indptr)
             and np.array_equal(self.indices, other.indices)
         )
+
+
+def structure_fingerprint(s: SparseStructure) -> str:
+    """Content hash of a nonzero structure, memoized on the object.
+
+    Lives here (not in the jax-side runtime, which re-exports it) so the
+    session's drift detection stays importable without a device stack.
+    """
+    fp = s.__dict__.get("_fingerprint")
+    if fp is None:
+        h = hashlib.sha1(f"{s.shape}".encode())
+        h.update(np.ascontiguousarray(s.indptr))
+        h.update(np.ascontiguousarray(s.indices))
+        fp = h.hexdigest()
+        object.__setattr__(s, "_fingerprint", fp)  # frozen dataclass
+    return fp
 
 
 def from_coo(rows, cols, shape) -> SparseStructure:

@@ -504,6 +504,65 @@ def case_moe_ep():
     print("OK moe_ep", float(loss_ref), float(loss_ep))
 
 
+def case_session():
+    """Resilient session at p=N_DEV: an MCL-style drift loop with faults
+    scripted at four stage boundaries (every product checked against numpy),
+    then kill-and-restore — a fresh session rebuilds its pool from the plan
+    store with zero retraces."""
+    import shutil
+    import tempfile
+
+    import repro
+    from repro.distributed import runtime
+    from repro.resilience import FaultPolicy
+    from repro.testing import faults
+
+    p = N_DEV
+    policy = FaultPolicy(backoff_s=0.0)
+    store = tempfile.mkdtemp(prefix="repro_session_store_")
+    try:
+        rng = np.random.default_rng(5)
+        n = 48
+        M = (rng.random((n, n)) * (rng.random((n, n)) < 0.2)).astype(np.float32)
+        M[np.arange(n), np.arange(n)] = 1.0
+        s = repro.session(p=p, model="rowwise", policy=policy, store_dir=store)
+        hist = []
+        schedule = {"partition": [1], "compile": [1], "execute": [2], "store_save": [0]}
+        with faults.scripted(schedule) as scripts:
+            for _ in range(4):
+                C = np.asarray(s.multiply(M, M))
+                np.testing.assert_allclose(C, M @ M, rtol=2e-4, atol=2e-4)
+                hist.append(M)
+                # prune + renormalize: the structure drifts for the next round
+                C[C < np.quantile(C[C > 0], 0.3)] = 0.0
+                col = C.sum(axis=0)
+                M = (C / np.where(col > 0, col, 1.0)).astype(np.float32)
+                M[np.arange(n), np.arange(n)] += 0.5
+        for stage, script in scripts.items():
+            assert script.fired == len(schedule[stage]), (stage, script.seen)
+        kinds = [e.kind for e in s.events]
+        assert kinds.count("cold_replan") + kinds.count("warm_replan") == 4, kinds
+        assert kinds.count("warm_replan") >= 1, kinds
+
+        # the crash: a fresh session restores every entry from the store
+        del s
+        s2 = repro.session(p=p, model="rowwise", policy=policy, store_dir=store)
+        before = runtime.trace_count()
+        for M_old in hist:
+            C = np.asarray(s2.multiply(M_old, M_old))
+            np.testing.assert_allclose(C, M_old @ M_old, rtol=2e-4, atol=2e-4)
+        assert runtime.trace_count() == before, "restored plans must not retrace"
+        kinds2 = [e.kind for e in s2.events]
+        assert kinds2.count("restored") == len(hist), kinds2
+        assert "cold_replan" not in kinds2 and "warm_replan" not in kinds2
+        print(
+            "OK session p=%d warm=%d restored=%d"
+            % (p, kinds.count("warm_replan"), len(hist))
+        )
+    finally:
+        shutil.rmtree(store, ignore_errors=True)
+
+
 if __name__ == "__main__":
     assert len(jax.devices()) == N_DEV, jax.devices()
     for name in sys.argv[1:] or [

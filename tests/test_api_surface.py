@@ -20,12 +20,15 @@ def test_top_level_all_is_pinned():
         "MODELS",
         "MODEL_SPECS",
         "CompiledSpGEMM",
+        "FaultPolicy",
         "ModelSpec",
         "PlannedSpGEMM",
         "SpGEMMInstance",
+        "SpGEMMSession",
         "device_count",
         "executable_models",
         "plan",
+        "session",
     ]
 
 
@@ -57,6 +60,29 @@ def test_plan_signature_is_pinned():
     }
 
 
+def test_session_signature_is_pinned():
+    sig = inspect.signature(repro.session)
+    assert list(sig.parameters) == [
+        "p", "model", "eps", "seed", "engine", "store_dir", "policy", "kwargs",
+    ]
+    defaults = {
+        k: v.default
+        for k, v in sig.parameters.items()
+        if v.default is not inspect.Parameter.empty
+    }
+    assert defaults == {
+        "p": 8,
+        "model": "auto",
+        "eps": 0.10,
+        "seed": 0,
+        "engine": "flat",
+        "store_dir": None,
+        "policy": None,
+    }
+    for attr in ("multiply", "stats", "__call__"):
+        assert callable(getattr(repro.SpGEMMSession, attr)), attr
+
+
 def test_planned_handle_surface_is_pinned():
     for attr in ("cost_report", "compile", "execute", "costs"):
         assert callable(getattr(repro.PlannedSpGEMM, attr)), attr
@@ -77,7 +103,8 @@ def test_planning_side_imports_do_not_import_jax():
     code = (
         "import sys; import repro, repro.api, repro.core, repro.sparse; "
         "import repro.distributed.registry, repro.distributed.select, "
-        "repro.distributed.plan_ir; "
+        "repro.distributed.plan_ir, repro.distributed.session; "
+        "import repro.resilience, repro.testing, repro.checkpoint; "
         "sys.exit(1 if 'jax' in sys.modules else 0)"
     )
     out = subprocess.run([sys.executable, "-c", code], capture_output=True)

@@ -47,6 +47,113 @@ def test_checkpoint_no_partial_commit(tmp_path):
     assert latest_step(d) == 1
 
 
+def test_interrupted_commit_leaves_restorable_checkpoint(tmp_path):
+    """Every crash window of the overwrite commit leaves a restorable latest
+    checkpoint.  The old protocol (rmtree(final) then rename) had a window
+    where the only copy of a step was gone; the rename-aside protocol never
+    does, and readers recover an orphaned .prev automatically."""
+    import shutil
+
+    d = str(tmp_path / "ckpt")
+    step_dir = os.path.join(d, f"step_{1:012d}")
+    save_checkpoint(d, 1, {"x": np.array([1])})
+
+    # crash window A: old renamed aside, new not yet in place
+    os.rename(step_dir, step_dir + ".prev")
+    assert latest_step(d) == 1  # reader recovers the .prev
+    restored, _ = restore_checkpoint(d, 1)
+    np.testing.assert_array_equal(restored["x"], [1])
+
+    # crash window B: new committed, stale .prev left behind
+    save_checkpoint(d, 1, {"x": np.array([2])})
+    shutil.copytree(step_dir, step_dir + ".prev")
+    assert all_steps(d) == [1]  # stale .prev dropped, not double-counted
+    restored, _ = restore_checkpoint(d, 1)
+    np.testing.assert_array_equal(restored["x"], [2])  # new copy wins
+    assert not os.path.exists(step_dir + ".prev")
+
+
+def test_checkpoint_overwrite_same_step(tmp_path):
+    """Re-saving a step replaces it atomically (the elastic loop re-saves the
+    restored step after a crash)."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, {"x": np.array([1])})
+    save_checkpoint(d, 3, {"x": np.array([9])})
+    restored, step = restore_checkpoint(d)
+    assert step == 3
+    np.testing.assert_array_equal(restored["x"], [9])
+
+
+def test_checkpoint_tuple_roundtrip(tmp_path):
+    """Tuples survive restore as tuples (they used to come back as lists,
+    breaking pytree-structure equality in tree_to_state)."""
+    state = {
+        "pair": (np.array([1.0]), np.array([2.0])),
+        "mixed": [np.array([3]), (np.array([4]), np.array([5]))],
+    }
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, state)
+    restored, _ = restore_checkpoint(d)
+    assert isinstance(restored["pair"], tuple)
+    assert isinstance(restored["mixed"], list)
+    assert isinstance(restored["mixed"][1], tuple)
+    np.testing.assert_array_equal(restored["pair"][1], [2.0])
+    np.testing.assert_array_equal(restored["mixed"][1][0], [4])
+    assert jax.tree.structure(restored) == jax.tree.structure(state)
+
+
+def test_retryable_predicate_classification():
+    """run_loop and FaultPolicy share one explicit predicate — not the old
+    'substring RESOURCE_EXHAUSTED in any RuntimeError' check."""
+    from repro.resilience import RetryableError, is_retryable
+
+    assert is_retryable(InjectedFailure("node lost"))
+    assert is_retryable(RetryableError("x"))
+    assert is_retryable(RuntimeError("RESOURCE_EXHAUSTED: oom"))
+    assert is_retryable(MemoryError())
+    assert is_retryable(TimeoutError())
+    assert is_retryable(OSError("disk blip"))
+    assert not is_retryable(FileNotFoundError("gone"))
+    assert not is_retryable(PermissionError("no"))
+    assert not is_retryable(ValueError("shape mismatch"))
+    assert not is_retryable(RuntimeError("plain bug"))
+
+
+def test_run_loop_does_not_restart_on_permanent_failure(tmp_path):
+    def step_fn(state, idx):
+        if idx == 2:
+            raise ValueError("permanent bug")
+        return state
+
+    with pytest.raises(ValueError):
+        run_loop(0, step_fn, 5, ckpt_dir=str(tmp_path / "c"), ckpt_every=1)
+
+
+def test_run_loop_backoff_between_restarts(tmp_path):
+    """Consecutive restarts back off exponentially; a completed step resets."""
+    sleeps = []
+    fails = {"n": 0}
+
+    def step_fn(state, idx):
+        if idx == 1 and fails["n"] < 3:
+            fails["n"] += 1
+            raise InjectedFailure("flaky step")
+        return state
+
+    _, stats = run_loop(
+        0,
+        step_fn,
+        3,
+        ckpt_dir=str(tmp_path / "c"),
+        ckpt_every=1,
+        max_restarts=5,
+        restart_backoff_s=0.1,
+        sleep=sleeps.append,
+    )
+    assert stats.restarts == 3
+    assert sleeps == pytest.approx([0.1, 0.2, 0.4])
+
+
 def _make_trainer():
     cfg = get_smoke_config("internlm2-1.8b")
     step = jax.jit(make_train_step(cfg, lr=1e-3))

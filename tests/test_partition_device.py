@@ -13,6 +13,7 @@ compile-once retrace accounting are exact.
 """
 import importlib
 import sys
+import warnings
 
 import numpy as np
 import pytest
@@ -31,6 +32,13 @@ def _instance(seed=0, shape=(60, 50, 55), density=0.08):
     a = random_structure(shape[0], shape[1], density, rng)
     b = random_structure(shape[1], shape[2], density, rng)
     return SpGEMMInstance(a, b)
+
+
+@pytest.fixture(autouse=True)
+def fresh_fallback_warnings(monkeypatch):
+    """The device->flat fallback warns once per process per reason; give each
+    test its own warned-set so warning assertions stay order-independent."""
+    monkeypatch.setattr(partition_mod, "_FALLBACK_WARNED", set())
 
 
 @pytest.fixture
@@ -107,14 +115,40 @@ def test_device_defers_to_host_below_threshold():
 
 def test_device_falls_back_to_flat_without_jax(device_everywhere, monkeypatch):
     """With the refine_device import blocked (as when jax is absent), the
-    driver warns and produces exactly the flat-engine result — planning-side
-    callers keep working with no jax installed (PR 5's contract)."""
+    driver warns ONCE and produces exactly the flat-engine result —
+    planning-side callers keep working with no jax installed (PR 5's
+    contract), and a replanning loop doesn't spam a warning per call."""
     monkeypatch.setitem(sys.modules, "repro.core.refine_device", None)
     hg = build_model(_instance(1), "rowwise")
     with pytest.warns(RuntimeWarning, match="falling back"):
         a = partition(hg, 4, eps=0.10, seed=0, engine="device")
     b = partition(hg, 4, eps=0.10, seed=0, engine="flat")
     assert np.array_equal(a.parts, b.parts)
+    # second call: same fallback, no second warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        c = partition(hg, 4, eps=0.10, seed=0, engine="device")
+    assert np.array_equal(c.parts, b.parts)
+
+
+def test_device_engine_failure_falls_back_to_flat(device_everywhere, monkeypatch):
+    """A device engine that *fails at runtime* (OOM, kernel error) degrades
+    to the flat engine with one warning and the identical flat result —
+    partitioning never dies because the accelerator did."""
+
+    def boom(hg, p, part_cap, seed, rd):
+        raise RuntimeError("RESOURCE_EXHAUSTED: injected device OOM")
+
+    monkeypatch.setattr(partition_mod, "_partition_device", boom)
+    hg = build_model(_instance(1), "rowwise")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        a = partition(hg, 4, eps=0.10, seed=0, engine="device")
+    b = partition(hg, 4, eps=0.10, seed=0, engine="flat")
+    assert np.array_equal(a.parts, b.parts)
+    assert a.connectivity == b.connectivity
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        partition(hg, 4, eps=0.10, seed=0, engine="device")  # warns once only
 
 
 def test_unknown_engine_still_rejected():

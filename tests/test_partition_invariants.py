@@ -150,3 +150,79 @@ def test_compute_counts_matches_bruteforce():
         pins = hg.pins_of(n)
         assert cnt[n, 0] == int((side[pins] == 0).sum())
         assert cnt[n, 1] == int((side[pins] == 1).sum())
+
+
+# ---------------------------------------------------------------------------
+# warm-start partitioning (drift-aware replanning, session satellite)
+# ---------------------------------------------------------------------------
+def test_warm_start_from_own_labels_is_feasible_and_no_worse():
+    hg = build_model(_instance(6, shape=(80, 60, 70)), "rowwise")
+    p, eps = 4, 0.10
+    cold = partition(hg, p, eps=eps, seed=0)
+    assert not cold.warm
+    warm = partition(hg, p, eps=eps, seed=0, warm_start=cold.parts)
+    assert warm.warm
+    # kway_refine polish is monotone: reusing the labels can only help
+    assert warm.connectivity <= cold.connectivity
+    w = hg.w_comp.astype(np.float64)
+    part_w = np.bincount(warm.parts, weights=w, minlength=p)
+    cap = max((1 + eps) * w.sum() / p, float(w.max()))
+    assert (part_w <= cap + 1e-9).all()
+
+
+def test_warm_start_fills_drift_holes_under_balance_cap():
+    hg = build_model(_instance(7, shape=(80, 60, 70)), "rowwise")
+    p, eps = 4, 0.10
+    cold = partition(hg, p, eps=eps, seed=1)
+    labels = cold.parts.copy()
+    rng = np.random.default_rng(3)
+    labels[rng.choice(hg.n_vertices, hg.n_vertices // 5, replace=False)] = -1
+    warm = partition(hg, p, eps=eps, seed=1, warm_start=labels)
+    assert warm.warm
+    assert ((warm.parts >= 0) & (warm.parts < p)).all()
+    w = hg.w_comp.astype(np.float64)
+    part_w = np.bincount(warm.parts, weights=w, minlength=p)
+    cap = max((1 + eps) * w.sum() / p, float(w.max()))
+    assert (part_w <= cap + 1e-9).all()
+
+
+def test_warm_start_beyond_drift_limit_goes_cold():
+    hg = build_model(_instance(8, shape=(80, 60, 70)), "rowwise")
+    p = 4
+    labels = np.full(hg.n_vertices, -1, dtype=np.int64)
+    labels[: hg.n_vertices // 4] = 0  # 75% drift > 50% limit
+    warm = partition(hg, p, eps=0.10, seed=2, warm_start=labels)
+    cold = partition(hg, p, eps=0.10, seed=2)
+    assert not warm.warm
+    assert np.array_equal(warm.parts, cold.parts)  # bit-identical cold path
+
+
+def test_warm_start_infeasible_polish_goes_cold(monkeypatch):
+    """If the polished warm result cannot satisfy the balance cap, reuse is
+    rejected and cold partitioning runs (polish neutered to force the case)."""
+    import importlib
+
+    partition_mod = importlib.import_module("repro.core.partition")
+    hg = build_model(_instance(6, shape=(80, 60, 70)), "rowwise")
+    p = 4
+    monkeypatch.setattr(
+        partition_mod, "kway_refine", lambda hg, parts, p, cap, **kw: parts
+    )
+    labels = np.zeros(hg.n_vertices, dtype=np.int64)  # everything on part 0
+    warm = partition(hg, p, eps=0.10, seed=0, warm_start=labels)
+    assert not warm.warm
+
+
+def test_warm_start_wrong_shape_goes_cold():
+    hg = build_model(_instance(6), "rowwise")
+    warm = partition(hg, 4, eps=0.10, seed=0, warm_start=np.zeros(3, np.int64))
+    cold = partition(hg, 4, eps=0.10, seed=0)
+    assert not warm.warm
+    assert np.array_equal(warm.parts, cold.parts)
+
+
+def test_warm_start_p1_short_circuits_warm():
+    hg = build_model(_instance(6), "rowwise")
+    res = partition(hg, 1, warm_start=np.zeros(hg.n_vertices, np.int64))
+    assert res.warm
+    assert (res.parts == 0).all()

@@ -1,0 +1,162 @@
+"""Plan-store contract: byte-faithful round-trips for every executable
+model's lowered plan, atomic commits, checksum/version quarantine.
+
+Planning and the store are jax-free; ``plan_fingerprint`` (the identity the
+executor LRU keys on) is the equality we assert — a restored plan with the
+same fingerprint compiles to a cache hit, which is the whole point of
+persisting it.
+"""
+import os
+import json
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.api import _plan_one
+from repro.checkpoint import (
+    PLAN_STORE_VERSION,
+    PlanStoreError,
+    list_plans,
+    restore_plan,
+    save_plan,
+)
+from repro.core import SpGEMMInstance
+from repro.sparse.structure import random_structure
+
+EXEC_MODELS = ("fine", "rowwise", "outer", "monoC")
+
+
+def _planned(model, seed=0):
+    rng = np.random.default_rng(seed)
+    a = random_structure(30, 26, 0.15, rng)
+    b = random_structure(26, 28, 0.15, rng)
+    return _plan_one(SpGEMMInstance(a, b), model, 2, 0.10, 0, include_nz=False)
+
+
+def _fp(plan):
+    from repro.distributed.runtime import plan_fingerprint
+
+    return plan_fingerprint(plan)
+
+
+# ---------------------------------------------------------------------------
+# round-trips
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("model", EXEC_MODELS)
+def test_roundtrip_preserves_plan_fingerprint(model, tmp_path):
+    planned = _planned(model)
+    plan = planned.execution_plan
+    assert plan is not None
+    store = str(tmp_path / "store")
+    save_plan(store, f"k_{model}", plan)
+    back = restore_plan(store, f"k_{model}")
+    assert back is not None
+    assert type(back.plan).__name__ == type(plan).__name__
+    assert back.plan.model == plan.model and back.plan.p == plan.p
+    assert back.plan.stats == {k: int(v) for k, v in plan.stats.items()}
+    assert _fp(back.plan) == _fp(plan)
+
+
+def test_roundtrip_preserves_extra_arrays_and_meta(tmp_path):
+    plan = _planned("rowwise").execution_plan
+    store = str(tmp_path / "store")
+    labels = np.arange(30) % 2
+    save_plan(store, "k", plan, arrays={"labels": labels}, meta={"p": 2, "m": "x"})
+    back = restore_plan(store, "k")
+    np.testing.assert_array_equal(back.arrays["labels"], labels)
+    assert back.meta == {"p": 2, "m": "x"}
+
+
+def test_missing_entry_returns_none(tmp_path):
+    assert restore_plan(str(tmp_path), "nothere") is None
+    assert list_plans(str(tmp_path / "void")) == []
+
+
+def test_bad_key_rejected(tmp_path):
+    plan = _planned("rowwise").execution_plan
+    with pytest.raises(ValueError, match="plan key"):
+        save_plan(str(tmp_path), "../escape", plan)
+    with pytest.raises(ValueError, match="plan key"):
+        restore_plan(str(tmp_path), "a/b")
+
+
+# ---------------------------------------------------------------------------
+# atomicity + crash recovery
+# ---------------------------------------------------------------------------
+def test_tmp_and_quarantined_dirs_are_invisible(tmp_path):
+    store = str(tmp_path / "store")
+    save_plan(store, "good", _planned("rowwise").execution_plan)
+    os.makedirs(os.path.join(store, "half.tmp"))  # crash mid-write
+    os.makedirs(os.path.join(store, "bad.quarantined-0"))
+    assert list_plans(store) == ["good"]
+    assert restore_plan(store, "half") is None
+
+
+def test_interrupted_overwrite_recovers_previous_entry(tmp_path):
+    store = str(tmp_path / "store")
+    plan = _planned("rowwise").execution_plan
+    save_plan(store, "k", plan, meta={"gen": 1})
+    # crash window: old renamed aside, new never landed
+    os.rename(os.path.join(store, "k"), os.path.join(store, "k.prev"))
+    assert list_plans(store) == ["k"]  # reader promotes the .prev back
+    assert restore_plan(store, "k").meta == {"gen": 1}
+    # overwrite commits atomically and drops any stale .prev
+    save_plan(store, "k", plan, meta={"gen": 2})
+    shutil.copytree(os.path.join(store, "k"), os.path.join(store, "k.prev"))
+    assert restore_plan(store, "k").meta == {"gen": 2}
+    assert not os.path.exists(os.path.join(store, "k.prev"))
+
+
+# ---------------------------------------------------------------------------
+# integrity: quarantine, not crash
+# ---------------------------------------------------------------------------
+def _corrupt_arrays(store, key):
+    blob = os.path.join(store, key, "arrays.npz")
+    raw = bytearray(open(blob, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(blob, "wb").write(bytes(raw))
+
+
+def test_checksum_mismatch_quarantines(tmp_path):
+    store = str(tmp_path / "store")
+    save_plan(store, "k", _planned("rowwise").execution_plan)
+    _corrupt_arrays(store, "k")
+    with pytest.warns(RuntimeWarning, match="quarantined 'k'.*checksum"):
+        assert restore_plan(store, "k") is None
+    assert list_plans(store) == []
+    assert os.path.isdir(os.path.join(store, "k.quarantined-0"))
+
+
+def test_version_mismatch_quarantines(tmp_path):
+    store = str(tmp_path / "store")
+    save_plan(store, "k", _planned("rowwise").execution_plan)
+    man = os.path.join(store, "k", "manifest.json")
+    with open(man) as f:
+        manifest = json.load(f)
+    manifest["version"] = PLAN_STORE_VERSION + 1
+    with open(man, "w") as f:
+        json.dump(manifest, f)
+    with pytest.warns(RuntimeWarning, match="version"):
+        assert restore_plan(store, "k") is None
+    assert list_plans(store) == []
+
+
+def test_quarantine_false_raises_instead(tmp_path):
+    store = str(tmp_path / "store")
+    save_plan(store, "k", _planned("rowwise").execution_plan)
+    _corrupt_arrays(store, "k")
+    with pytest.raises(PlanStoreError, match="checksum"):
+        restore_plan(store, "k", quarantine=False)
+    assert list_plans(store) == ["k"]  # untouched: the caller decides
+
+
+def test_repeated_corruption_gets_numbered_quarantines(tmp_path):
+    store = str(tmp_path / "store")
+    plan = _planned("rowwise").execution_plan
+    for n in range(2):
+        save_plan(store, "k", plan)
+        _corrupt_arrays(store, "k")
+        with pytest.warns(RuntimeWarning):
+            restore_plan(store, "k")
+        assert os.path.isdir(os.path.join(store, f"k.quarantined-{n}"))

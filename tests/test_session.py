@@ -1,0 +1,255 @@
+"""Resilient session lifecycle: pool hits, drift-aware warm replanning,
+injected failures at every stage boundary, model downgrades, and
+kill-and-restore from the persistent plan store with zero recompilation.
+
+Runs at ``p=1`` so the whole lifecycle executes in-process on one device;
+the multi-device variant lives in ``tests/multidev_runner.py``.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+import repro
+from repro.checkpoint import list_plans
+from repro.distributed import runtime
+from repro.resilience import FaultPolicy
+from repro.testing import faults
+
+FAST = FaultPolicy(max_retries=2, backoff_s=0.0)
+
+
+def _mats(seed=0, shape=(14, 12, 13), density=0.35):
+    rng = np.random.default_rng(seed)
+    A = rng.random(shape[:2]) * (rng.random(shape[:2]) < density)
+    B = rng.random(shape[1:]) * (rng.random(shape[1:]) < density)
+    # no empty rows/cols on the contraction axis (keeps products non-trivial)
+    A[np.arange(shape[0]), rng.integers(0, shape[1], shape[0])] = 1.0
+    B[np.arange(shape[1]), rng.integers(0, shape[2], shape[1])] = 1.0
+    return A.astype(np.float32), B.astype(np.float32)
+
+
+def _drift(M, seed=1, frac=0.15):
+    """Perturb the sparsity structure in place-shape: drop some nonzeros,
+    add some new ones."""
+    rng = np.random.default_rng(seed)
+    out = M.copy()
+    nz = np.flatnonzero(out)
+    drop = rng.choice(nz, max(1, int(frac * len(nz))), replace=False)
+    out.flat[drop] = 0.0
+    z = np.flatnonzero(out == 0)
+    add = rng.choice(z, max(1, int(frac * len(nz))), replace=False)
+    out.flat[add] = rng.random(len(add)).astype(np.float32) + 0.1
+    return out
+
+
+def _kinds(s):
+    return [e.kind for e in s.events]
+
+
+def _check(s, A, B):
+    C = np.asarray(s.multiply(A, B))
+    np.testing.assert_allclose(C, A @ B, rtol=2e-4, atol=2e-4)
+    return C
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: cold plan -> pool hit -> drift -> warm replan
+# ---------------------------------------------------------------------------
+def test_unchanged_structure_hits_warm_pool():
+    A, B = _mats(0)
+    s = repro.session(p=1, model="rowwise", policy=FAST)
+    _check(s, A, B)
+    assert _kinds(s) == ["cold_replan"]
+    # same structure, new values: pool hit, no replanning of any kind
+    _check(s, A * 2.0, B)
+    assert _kinds(s) == ["cold_replan", "hit"]
+    assert s.stats()["pool_size"] == 1
+
+
+def test_drifted_structure_warm_starts_the_partitioner():
+    A, B = _mats(1)
+    s = repro.session(p=1, model="rowwise", policy=FAST)
+    _check(s, A, B)
+    A2 = _drift(A, seed=2)
+    _check(s, A2, B)
+    kinds = _kinds(s)
+    assert kinds.count("warm_replan") == 1
+    warm = next(e for e in s.events if e.kind == "warm_replan")
+    assert 0.0 <= warm.detail["drift"] < 1.0
+    # drifting back: the first structure is still in the pool
+    _check(s, A, B)
+    assert _kinds(s)[-1] == "hit"
+
+
+def test_shape_change_forces_cold_replan():
+    s = repro.session(p=1, model="rowwise", policy=FAST)
+    _check(s, *_mats(3))
+    _check(s, *_mats(3, shape=(20, 12, 13)))  # labels can't carry across I
+    assert _kinds(s) == ["cold_replan", "cold_replan"]
+
+
+def test_model_auto_resolves_once_then_warm_starts():
+    A, B = _mats(4)
+    s = repro.session(p=1, model="auto", policy=FAST)
+    _check(s, A, B)
+    resolved = s.stats()["model"]
+    assert resolved in repro.executable_models()
+    _check(s, _drift(A, seed=5), B)
+    assert s.stats()["model"] == resolved
+    assert _kinds(s)[-1] == "warm_replan"
+
+
+def test_pool_is_bounded_lru():
+    s = repro.session(p=1, model="rowwise", policy=FAST, max_entries=2)
+    for seed in range(4):
+        _check(s, *_mats(seed))
+    assert s.stats()["pool_size"] == 2
+
+
+# ---------------------------------------------------------------------------
+# fault injection: every stage boundary, transient and permanent
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("stage", faults.STAGES)
+def test_transient_fault_at_each_stage_is_retried(stage, tmp_path):
+    """One multiply touches all five boundaries (empty store: restore is
+    attempted, returns nothing, plan is saved).  A transient failure at any
+    one of them must be retried and leave the result correct."""
+    A, B = _mats(10 + list(faults.STAGES).index(stage))  # defeat executor LRU
+    s = repro.session(
+        p=1, model="rowwise", policy=FAST, store_dir=str(tmp_path / "store")
+    )
+    with faults.inject(stage, times=1) as script:
+        _check(s, A, B)
+    assert script.fired == 1, f"fault at {stage!r} never fired"
+    retried = [e for e in s.events if e.kind == "retry" and e.detail["stage"] == stage]
+    assert len(retried) == 1
+    assert "saved" in _kinds(s)
+
+
+def test_permanent_execute_failure_downgrades_model():
+    A, B = _mats(20)
+    s = repro.session(p=1, model="fine", policy=FAST)
+    with faults.inject("execute", exc=ValueError, times=1) as script:
+        _check(s, A, B)
+    assert script.fired == 1
+    kinds = _kinds(s)
+    assert "model_downgrade" in kinds
+    down = next(e for e in s.events if e.kind == "model_downgrade")
+    assert down.detail["from_model"] == "fine"
+    assert down.model == "monoC"
+    assert s.stats()["model"] == "monoC"
+    # the downgraded entry is the warm one now: next call is a pure hit
+    _check(s, A, B)
+    assert _kinds(s)[-1] == "hit"
+
+
+def test_permanent_store_failure_is_nonfatal(tmp_path):
+    A, B = _mats(21)
+    s = repro.session(
+        p=1, model="rowwise", policy=FAST, store_dir=str(tmp_path / "store")
+    )
+    with faults.inject("store_save", exc=ValueError, times=1):
+        _check(s, A, B)  # persistence lost, multiply unharmed
+    ev = next(e for e in s.events if e.kind == "store_error")
+    assert ev.detail["op"] == "save"
+    assert "saved" not in _kinds(s)
+    assert list_plans(str(tmp_path / "store")) == []
+
+
+def test_mcl_style_loop_survives_scripted_faults(tmp_path):
+    """The acceptance loop: expand-and-prune iterations (structure drifts
+    every step) with failures scripted at several boundaries, every product
+    still bit-checked against numpy."""
+    rng = np.random.default_rng(7)
+    n = 16
+    M = (rng.random((n, n)) * (rng.random((n, n)) < 0.4)).astype(np.float32)
+    M[np.arange(n), np.arange(n)] = 1.0  # self-loops keep rows nonempty
+    s = repro.session(
+        p=1, model="rowwise", policy=FAST, store_dir=str(tmp_path / "store")
+    )
+    schedule = {"partition": [1], "execute": [2], "store_save": [0], "compile": [1]}
+    with faults.scripted(schedule) as scripts:
+        for _ in range(4):
+            C = np.asarray(s.multiply(M, M))
+            np.testing.assert_allclose(C, M @ M, rtol=2e-4, atol=2e-4)
+            # prune + renormalize: the structure drifts for the next round
+            C[C < np.quantile(C[C > 0], 0.3)] = 0.0
+            col = C.sum(axis=0)
+            M = (C / np.where(col > 0, col, 1.0)).astype(np.float32)
+            M[np.arange(n), np.arange(n)] += 0.5
+    for stage, script in scripts.items():
+        assert script.fired == len(schedule[stage]), f"{stage} fault never fired"
+    kinds = _kinds(s)
+    assert kinds.count("cold_replan") == 1
+    assert kinds.count("warm_replan") == 3
+
+
+# ---------------------------------------------------------------------------
+# persistence: kill-and-restore, corruption quarantine
+# ---------------------------------------------------------------------------
+def test_killed_session_restores_from_store_without_recompiling(tmp_path):
+    store = str(tmp_path / "store")
+    A, B = _mats(30)
+    s1 = repro.session(p=1, model="rowwise", policy=FAST, store_dir=store)
+    want = _check(s1, A, B)
+    assert "saved" in _kinds(s1)
+    del s1  # the crash
+
+    s2 = repro.session(p=1, model="rowwise", policy=FAST, store_dir=store)
+    before = runtime.trace_count()
+    got = _check(s2, A, B)
+    assert runtime.trace_count() == before  # no retrace: the restored plan
+    # is content-identical, so compilation hits the process-wide executor LRU
+    assert _kinds(s2) == ["restored"]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # restored labels seed warm starts exactly like home-grown ones
+    _check(s2, _drift(A, seed=31), B)
+    assert _kinds(s2)[-2:] == ["warm_replan", "saved"]
+
+
+def test_corrupt_store_entry_is_quarantined_and_replanned(tmp_path):
+    store = str(tmp_path / "store")
+    A, B = _mats(32)
+    s1 = repro.session(p=1, model="rowwise", policy=FAST, store_dir=store)
+    _check(s1, A, B)
+    (key,) = list_plans(store)
+    blob = os.path.join(store, key, "arrays.npz")
+    raw = bytearray(open(blob, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(blob, "wb").write(bytes(raw))
+
+    s2 = repro.session(p=1, model="rowwise", policy=FAST, store_dir=store)
+    with pytest.warns(RuntimeWarning, match="quarantin"):
+        _check(s2, A, B)
+    assert _kinds(s2)[:1] == ["cold_replan"]  # store gave nothing back
+    assert list_plans(store) == [key]  # fresh plan re-saved under the key
+    assert any(d.startswith(key + ".quarantined") for d in os.listdir(store))
+
+
+# ---------------------------------------------------------------------------
+# multi-device: the full acceptance loop at p=4 (subprocess: forced host
+# devices must not leak into this pytest process' jax)
+# ---------------------------------------------------------------------------
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUNNER = os.path.join(ROOT, "tests", "multidev_runner.py")
+
+
+def test_multidev_session_drift_faults_and_restore():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_DEVICES"] = "4"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, RUNNER, "session"],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "OK session p=4" in out.stdout
