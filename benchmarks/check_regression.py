@@ -10,10 +10,11 @@ hot-path regression does.
 Cells are compared by name; only ``status == ok`` cells with a timing above
 ``--min-us`` on both sides participate (micro-cells are timer noise).
 Quality metrics ride along: a cell whose ``connectivity`` worsens by more
-than the tolerance also fails, and a cell whose ``pins_per_sec`` planning
-throughput drops below the machine-scaled baseline floor fails too — the
-gate guards the speed/quality claim of the partitioner (including the
-device engine's throughput headline), not just wall time.
+than the tolerance also fails, and a cell whose throughput
+(``pins_per_sec`` planning rate, serving-loop ``qps``) drops below the
+machine-scaled baseline floor fails too — the gate guards the
+speed/quality claim of the partitioner and the serving tier's QPS/p99
+headline, not just wall time.
 
 CI usage:
     PYTHONPATH=src:. python benchmarks/check_regression.py partition plan
@@ -29,15 +30,25 @@ import time
 import numpy as np
 
 BASELINE_DIR = os.path.join("experiments", "baselines")
-SUITES = ("partition", "plan", "exec", "session")
-MIN_US = {"partition": 5_000, "plan": 2_500, "exec": 1_000, "session": 2_000}
-# per-suite slowdown allowance overriding the CLI/global default: exec cells
-# time multi-host-device collectives whose scheduling jitter is far above
-# the numpy suites' (2-3x between runs on a contended machine), while the
-# regression they guard against — steady state falling back to the
-# rebuild/retrace path — is a 30-170x cliff.  A 3x gate is immune to the
-# jitter and still catches that cliff instantly.
-TOLERANCE = {"exec": 2.0}
+SUITES = ("partition", "plan", "exec", "session", "serve")
+MIN_US = {
+    "partition": 5_000,
+    "plan": 2_500,
+    "exec": 1_000,
+    "session": 2_000,
+    "serve": 100,
+}
+# per-suite slowdown allowance overriding the CLI/global default: exec/serve
+# cells time multi-host-device collectives whose scheduling jitter is far
+# above the numpy suites' (2-3x between runs on a contended machine), while
+# the regressions they guard against — steady state falling back to the
+# rebuild/retrace path, or the serving loop losing its warm pool / batched
+# dispatch — are 5-170x cliffs.  A 3x gate is immune to the jitter and
+# still catches those cliffs instantly.
+TOLERANCE = {"exec": 2.0, "serve": 2.0}
+#: throughput fields floor-gated per cell (same machine-factor scaling the
+#: timing ceiling gets): partitioner planning rate, serving-loop QPS
+THROUGHPUT_FIELDS = ("pins_per_sec", "qps")
 
 
 def _suite_records(suite: str) -> list[dict]:
@@ -63,6 +74,12 @@ def _suite_records(suite: str) -> list[dict]:
         # session_exec cells ride along ungated (the "exec" name filter
         # below) but still assert their own floors when devices allow
         from benchmarks.bench_session import run
+
+        return run(out_dir=None, quick=True)
+    if suite == "serve":
+        # serving tier: batched-stream speedup + warmed serving-loop QPS/p99
+        # (multidev CI job; single-device runs emit only skip cells)
+        from benchmarks.bench_serve import run
 
         return run(out_dir=None, quick=True)
     raise ValueError(f"unknown suite {suite!r}; choose from {SUITES}")
@@ -124,7 +141,9 @@ def check(suite: str, tolerance: float, min_us: int, cur_cal: int) -> list[str]:
     for rec in records:
         if rec.get("status") != "ok" or rec["name"] not in base_by_name:
             continue
-        if suite != "exec" and ("exec" in rec["name"] or "/loop" in rec["name"]):
+        if suite not in ("exec", "serve") and (
+            "exec" in rec["name"] or "/loop" in rec["name"]
+        ):
             # in the partition/plan suites, executor cells time XLA jit
             # compiles and the retained loop references are single-repeat
             # Python loops — both far too variable for a 25% gate.  The
@@ -149,15 +168,16 @@ def check(suite: str, tolerance: float, min_us: int, cur_cal: int) -> list[str]:
                     f"{rec['name']}: connectivity {rec['connectivity']} > "
                     f"baseline {ref['connectivity']} * {1 + tolerance}"
                 )
-        # partition-throughput ride-along (device-engine headline): the same
-        # machine factor that relaxes the timing gate lowers the floor here
-        if ref.get("pins_per_sec") and min(cur_us, base_us) >= min_us:
-            floor = ref["pins_per_sec"] / factor / (1 + tolerance)
-            if rec.get("pins_per_sec", 0) < floor:
-                failures.append(
-                    f"{rec['name']}: pins_per_sec {rec.get('pins_per_sec', 0)} "
-                    f"< floor {int(floor)} (baseline {ref['pins_per_sec']})"
-                )
+        # throughput ride-alongs (device-engine pin rate, serving QPS): the
+        # same machine factor that relaxes the timing gate lowers the floor
+        for field in THROUGHPUT_FIELDS:
+            if ref.get(field) and min(cur_us, base_us) >= min_us:
+                floor = ref[field] / factor / (1 + tolerance)
+                if rec.get(field, 0) < floor:
+                    failures.append(
+                        f"{rec['name']}: {field} {rec.get(field, 0)} "
+                        f"< floor {int(floor)} (baseline {ref[field]})"
+                    )
     return failures
 
 

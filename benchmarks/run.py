@@ -13,7 +13,7 @@ import sys
 
 from benchmarks import bench_amg, bench_bounds, bench_exec, bench_kernels, bench_lp
 from benchmarks import bench_mcl, bench_partition, bench_plan_build, bench_select
-from benchmarks import bench_tab2, roofline
+from benchmarks import bench_serve, bench_tab2, roofline
 from benchmarks.common import csv_lines
 
 SUITES = {
@@ -27,6 +27,7 @@ SUITES = {
     "partition": bench_partition.run,
     "select": bench_select.run,
     "exec": bench_exec.run,
+    "serve": bench_serve.run,
     "roofline": roofline.run,
 }
 

@@ -77,6 +77,12 @@ class CompiledSpGEMM:
     order of the planned structures) and returns the dense (I, J) product —
     no caller-visible mesh, dtype, block or layout special-casing.  The raw
     device-shard interface stays available as ``.runtime``.
+
+    A handle compiled with ``batch=n`` streams value *batches*: inputs are
+    (m, nnz) arrays with ``1 <= m <= batch_capacity`` (the bucketed
+    capacity), the output is (m, I, J).  Ragged batches are zero-padded up
+    to the capacity on the way in and trimmed on the way out, so every
+    batch size within one bucket hits the same AOT executable.
     """
 
     def __init__(
@@ -103,22 +109,62 @@ class CompiledSpGEMM:
         return self.runtime.dtype
 
     @property
+    def batch_capacity(self) -> int | None:
+        """Batch slots the executor was compiled for (None: unbatched)."""
+        return self.runtime.batch
+
+    @property
     def cost_model_words(self) -> tuple[int, int]:
         """(ideal, padded) words per call, from the plan's routes."""
         return self.runtime.cost_model_words
 
     def pack(self, a_values, b_values) -> tuple[np.ndarray, np.ndarray]:
-        """Canonical 1-D nonzero vectors -> the executor's value layout."""
+        """Canonical 1-D nonzero vectors -> the executor's value layout.
+
+        For a batched handle the inputs are (m, nnz) stacks; each row is
+        packed independently and the stack is zero-padded to the compiled
+        batch capacity (padding rows cost device flops, never correctness —
+        their products are simply dropped by ``__call__``).
+        """
         block = self.runtime.block
-        return (
-            self.spec.pack_values(np.asarray(a_values), block),
-            self.spec.pack_values(np.asarray(b_values), block),
-        )
+        if self.batch_capacity is None:
+            return (
+                self.spec.pack_values(np.asarray(a_values), block),
+                self.spec.pack_values(np.asarray(b_values), block),
+            )
+        cap = self.batch_capacity
+
+        def pack_stack(values, name):
+            values = np.atleast_2d(np.asarray(values))
+            m = values.shape[0]
+            if not 1 <= m <= cap:
+                raise ValueError(
+                    f"{name} batch of {m} exceeds the compiled capacity {cap}; "
+                    f"recompile with batch={m} (bucketed) or split the batch"
+                )
+            packed = np.stack(
+                [self.spec.pack_values(values[i], block) for i in range(m)]
+            )
+            if m < cap:
+                pad = np.zeros((cap - m, *packed.shape[1:]), packed.dtype)
+                packed = np.concatenate([packed, pad])
+            return packed, m
+
+        a, m_a = pack_stack(a_values, "A")
+        b, m_b = pack_stack(b_values, "B")
+        if m_a != m_b:
+            raise ValueError(f"A batch ({m_a}) and B batch ({m_b}) disagree")
+        return a, b
 
     def __call__(self, a_values, b_values) -> np.ndarray:
-        a, b = self.pack(a_values, b_values)
         I, J = self._out
-        return np.asarray(self.runtime.unpack(self.runtime(a, b)))[:I, :J]
+        if self.batch_capacity is None:
+            a, b = self.pack(a_values, b_values)
+            return np.asarray(self.runtime.unpack(self.runtime(a, b)))[:I, :J]
+        m = np.atleast_2d(np.asarray(a_values)).shape[0]
+        a, b = self.pack(a_values, b_values)
+        c_local = np.asarray(self.runtime(a, b))[:m]
+        return self.runtime.unpack(c_local)[:, :I, :J]
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +262,7 @@ class PlannedSpGEMM:
         devices=None,
         dtype=np.float32,
         backend: str | None = None,
+        batch: int | None = None,
     ) -> CompiledSpGEMM:
         """AOT-compile the pipeline's executor.
 
@@ -223,6 +270,13 @@ class PlannedSpGEMM:
         its 2D mesh, including the odd-p fallback, without the caller ever
         seeing it), as do backend defaults; ``devices`` optionally pins the
         device set (default: the first p of ``jax.devices()``).
+
+        ``batch=n`` compiles the *batched* step: the registered runner is
+        vmapped over a leading value-batch axis so up to ``n`` same-structure
+        multiplies stream through one dispatch (multi-RHS, MCL/AMG iterated
+        chains).  ``n`` is rounded up to a geometric capacity bucket
+        (``runtime.batch_bucket``) so ragged request batches share one AOT
+        executable; the handle pads and trims transparently.
         """
         if self.execution_plan is None:
             if self.spec.executable:
@@ -235,7 +289,7 @@ class PlannedSpGEMM:
                 f"model {self.model!r} is volume-only (predicts, never "
                 f"executes); executable models: {executable_models()}"
             )
-        from repro.distributed.runtime import compile_spgemm
+        from repro.distributed.runtime import batch_bucket, compile_spgemm
 
         spec = self.spec
         inst = self.instance
@@ -251,6 +305,7 @@ class PlannedSpGEMM:
             backend=backend,
             block=spec.compile_defaults.get("block", 1),
             c_structure=inst.c,
+            batch=None if batch is None else batch_bucket(batch),
         )
         return CompiledSpGEMM(self, runtime_exe, spec)
 

@@ -59,6 +59,33 @@ class RunnerSetup:
     out_shape: tuple[int, int]
 
 
+def vmap_batched_runner(make_runner: Callable) -> Callable:
+    """Lift an unbatched runner factory to a batched one by ``jax.vmap``.
+
+    The returned factory has the runner signature plus ``batch``: the
+    compiled step maps over a leading batch axis on both value buffers, so
+    one AOT executable streams ``batch`` same-structure multiplies per
+    dispatch (multi-RHS products, MCL/AMG iterated chains).  This is the
+    default ``ModelSpec.make_batched_runner`` — a spec whose step can't be
+    vmapped (or has a faster hand-batched lowering) declares its own.
+    """
+
+    def make_batched(
+        plan, a_structure, b_structure, mesh, *, batch, **kwargs
+    ) -> RunnerSetup:
+        import jax
+
+        setup = make_runner(plan, a_structure, b_structure, mesh, **kwargs)
+        return RunnerSetup(
+            run=jax.vmap(setup.run),
+            a_shape=(batch, *setup.a_shape),
+            b_shape=(batch, *setup.b_shape),
+            out_shape=setup.out_shape,
+        )
+
+    return make_batched
+
+
 def owner_slot(local_ids: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
     """Invert a padded per-device id list into global-id -> (device, slot)
     lookup arrays (every id appears exactly once by construction)."""
@@ -280,6 +307,7 @@ class ModelSpec:
     build: Callable  # (inst, include_nz=False) -> Hypergraph
     lower: Callable | None = None  # (inst, parts, p) -> ExecutionPlan
     make_runner: Callable | None = None  # see RunnerSetup
+    make_batched_runner: Callable | None = None  # (..., batch=n) -> RunnerSetup
     unpack: Callable | None = None  # (c_local, plan, c_structure, shape) -> dense
     mesh_shape: Callable = _mesh_1d  # p -> process-grid shape
     axis_names: tuple[str, ...] = ("x",)
@@ -294,6 +322,22 @@ class ModelSpec:
     @property
     def executable(self) -> bool:
         return self.lower is not None and self.make_runner is not None
+
+    def make_setup(
+        self, plan, a_structure, b_structure, mesh, *, batch=None, **kwargs
+    ) -> RunnerSetup:
+        """Build the executor core the runtime AOT-compiles.
+
+        ``batch=None`` is the classic one-multiply step; ``batch=n`` returns
+        the model's batched lowering (its declared ``make_batched_runner``,
+        else the generic vmap lift) compiled for exactly ``n`` value sets.
+        """
+        if self.make_runner is None:
+            raise ValueError(f"no runtime lowering for model {self.name!r}")
+        if batch is None:
+            return self.make_runner(plan, a_structure, b_structure, mesh, **kwargs)
+        factory = self.make_batched_runner or vmap_batched_runner(self.make_runner)
+        return factory(plan, a_structure, b_structure, mesh, batch=batch, **kwargs)
 
     def default_mesh(self, p: int, devices=None):
         """Build the model's process grid over ``devices`` (default: the

@@ -64,6 +64,7 @@ from repro.testing import faults
 
 __all__ = [
     "CompiledSpGEMM",
+    "batch_bucket",
     "compile_spgemm",
     "cache_clear",
     "cache_info",
@@ -72,6 +73,24 @@ __all__ = [
     "structure_fingerprint",
     "trace_count",
 ]
+
+# -- batch-size bucketing ----------------------------------------------------
+#: geometric batch-capacity buckets (x2 from 1).  A batched executor is
+#: compiled for a bucket CAPACITY, not a request count: ragged request
+#: batches pad up to the same capacity and hit the same AOT executable —
+#: the serving loop never retraces on batch-size jitter (the same idea as
+#: the device partitioner's x1.5 shape buckets, PR 6).
+BATCH_GROWTH = 2
+
+
+def batch_bucket(n: int) -> int:
+    """Smallest batch-capacity bucket holding ``n`` items (1, 2, 4, 8, ...)."""
+    if n < 1:
+        raise ValueError(f"batch size must be >= 1, got {n}")
+    b = 1
+    while b < n:
+        b *= BATCH_GROWTH
+    return b
 
 # -- retrace accounting ------------------------------------------------------
 _TRACE_COUNT = 0
@@ -146,6 +165,7 @@ class CompiledSpGEMM:
         axis: str = "x",
         axes: tuple[str, str] = ("x", "y"),
         c_structure: SparseStructure | None = None,
+        batch: int | None = None,
     ):
         faults.fire("compile")
         if mesh.devices.size != plan.p:
@@ -156,6 +176,8 @@ class CompiledSpGEMM:
             raise ValueError(
                 f"inner dimensions disagree: {a_structure.shape} @ {b_structure.shape}"
             )
+        if batch is not None and batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
         self.plan = plan
         self.model = plan.model
         self.mesh = mesh
@@ -163,13 +185,14 @@ class CompiledSpGEMM:
         self.block = block
         self.backend = backend
         self.c_structure = c_structure
+        self.batch = batch
         dt = self.dtype
 
         spec = get_spec(plan.model)
         if spec.make_runner is None:
             raise ValueError(f"no runtime lowering for model {plan.model!r}")
         self.spec = spec
-        setup = spec.make_runner(
+        setup = spec.make_setup(
             plan,
             a_structure,
             b_structure,
@@ -179,6 +202,7 @@ class CompiledSpGEMM:
             backend=backend,
             axis=axis,
             axes=axes,
+            batch=batch,
         )
         self._I, self._J = setup.out_shape
         self._a_shape, self._b_shape = setup.a_shape, setup.b_shape
@@ -220,8 +244,9 @@ class CompiledSpGEMM:
 
     def __call__(self, a_values, b_values) -> jax.Array:
         """Value-only update: returns device-major C shards (the same layout
-        the underlying ``*_spgemm`` executor returns).  Passing a jax.Array
-        transfers ownership of its buffer (donation)."""
+        the underlying ``*_spgemm`` executor returns; a leading batch axis
+        when compiled with ``batch=n``).  Passing a jax.Array transfers
+        ownership of its buffer (donation)."""
         faults.fire("execute")
         a = self._coerce(a_values, self._a_shape, "A")
         b = self._coerce(b_values, self._b_shape, "B")
@@ -229,10 +254,21 @@ class CompiledSpGEMM:
 
     def unpack(self, c_local) -> np.ndarray:
         """Scatter device-major C shards back to a dense (I, J) array (padded
-        block-grid shape for monoC) via the model's registered unpacker."""
+        block-grid shape for monoC) via the model's registered unpacker.  A
+        batched executor's shards carry a leading batch axis and unpack to
+        (batch, I, J)."""
         if self.spec.needs_c_structure and self.c_structure is None:
             raise ValueError(f"unpacking a {self.model} result needs c_structure")
-        return self.spec.unpack(c_local, self.plan, self.c_structure, (self._I, self._J))
+        shape = (self._I, self._J)
+        if self.batch is None:
+            return self.spec.unpack(c_local, self.plan, self.c_structure, shape)
+        c_local = np.asarray(c_local)
+        return np.stack(
+            [
+                self.spec.unpack(c_local[i], self.plan, self.c_structure, shape)
+                for i in range(c_local.shape[0])
+            ]
+        )
 
     @property
     def cost_model_words(self) -> tuple[int, int]:
@@ -247,7 +283,9 @@ _CACHE: OrderedDict[tuple, CompiledSpGEMM] = OrderedDict()
 _STATS = {"hits": 0, "misses": 0}
 
 
-def _cache_key(plan, a_structure, b_structure, mesh, dtype, backend, block, axis, axes):
+def _cache_key(
+    plan, a_structure, b_structure, mesh, dtype, backend, block, axis, axes, batch
+):
     return (
         plan_fingerprint(plan),
         structure_fingerprint(a_structure),
@@ -258,6 +296,7 @@ def _cache_key(plan, a_structure, b_structure, mesh, dtype, backend, block, axis
         block,
         axis,
         tuple(axes),
+        batch,
     )
 
 
@@ -273,21 +312,28 @@ def compile_spgemm(
     axis: str = "x",
     axes: tuple[str, str] = ("x", "y"),
     c_structure: SparseStructure | None = None,
+    batch: int | None = None,
     cache: bool = True,
 ) -> CompiledSpGEMM:
     """Get (or build) the AOT executor for a plan + structure + mesh + dtype.
 
     Cache hits return the *same* ``CompiledSpGEMM`` object — same XLA
-    executable, zero retracing.  ``cache=False`` bypasses the LRU entirely
-    (a fresh trace + compile: the rebuild-everything reference path the
-    benchmarks compare against).
+    executable, zero retracing.  ``batch=n`` compiles the vmapped executor
+    for a fixed batch capacity (one more key dimension — callers should
+    bucket ``n`` through ``batch_bucket`` so ragged request batches share an
+    executable).  ``cache=False`` bypasses the LRU entirely (a fresh trace +
+    compile: the rebuild-everything reference path the benchmarks compare
+    against).
     """
     if not cache:
         return CompiledSpGEMM(
             plan, a_structure, b_structure, mesh, dtype=dtype, backend=backend,
             block=block, axis=axis, axes=axes, c_structure=c_structure,
+            batch=batch,
         )
-    key = _cache_key(plan, a_structure, b_structure, mesh, dtype, backend, block, axis, axes)
+    key = _cache_key(
+        plan, a_structure, b_structure, mesh, dtype, backend, block, axis, axes, batch
+    )
     exe = _CACHE.get(key)
     if exe is not None:
         _CACHE.move_to_end(key)
@@ -298,7 +344,7 @@ def compile_spgemm(
     _STATS["misses"] += 1
     exe = CompiledSpGEMM(
         plan, a_structure, b_structure, mesh, dtype=dtype, backend=backend,
-        block=block, axis=axis, axes=axes, c_structure=c_structure,
+        block=block, axis=axis, axes=axes, c_structure=c_structure, batch=batch,
     )
     _CACHE[key] = exe
     while len(_CACHE) > CACHE_SIZE:

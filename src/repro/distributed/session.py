@@ -54,7 +54,7 @@ __all__ = ["SessionEvent", "SpGEMMSession"]
 class SessionEvent:
     """One recorded session decision (pool hit, replan, retry, downgrade...)."""
 
-    kind: str  # hit | warm_replan | cold_replan | restored | saved |
+    kind: str  # hit | warm_replan | cold_replan | restored | saved | evict |
     # retry | engine_fallback | model_downgrade | store_error
     key: str  # structure-pair key the decision applies to
     model: str | None = None
@@ -151,14 +151,12 @@ class SpGEMMSession:
         self._model_resolved: str | None = None if model == "auto" else model
 
     # -- public API --------------------------------------------------------
-    def multiply(self, A, B) -> np.ndarray:
-        """Dense C = A @ B, planning/compiling/restoring only as needed.
-
-        ``A`` / ``B`` are dense arrays, scipy sparse matrices, or
-        ``(SparseStructure, values)`` pairs (values in canonical CSR order).
-        """
-        a_s, a_vals = structure_and_values(A)
-        b_s, b_vals = structure_and_values(B)
+    def entry_for(self, a_s, b_s) -> _Entry:
+        """The warm pool entry for a structure pair, planning/restoring as
+        needed (and classifying the access as hit / restored / warm_replan /
+        cold_replan on ``events``).  This is the session's planning half —
+        ``multiply`` executes through it, and the serving loop
+        (``repro.launch.serve``) batches through it."""
         key = self._key(a_s, b_s)
         entry = self._pool.get(key)
         if entry is not None:
@@ -173,8 +171,20 @@ class SpGEMMSession:
                 entry = self._plan_entry(key, inst)
                 self._persist(entry)
             self._admit(entry)
-        c = self._execute(entry, a_vals, b_vals, key)
-        self._last = self._pool.get(key, self._last)
+        self._last = entry
+        return entry
+
+    def multiply(self, A, B) -> np.ndarray:
+        """Dense C = A @ B, planning/compiling/restoring only as needed.
+
+        ``A`` / ``B`` are dense arrays, scipy sparse matrices, or
+        ``(SparseStructure, values)`` pairs (values in canonical CSR order).
+        """
+        a_s, a_vals = structure_and_values(A)
+        b_s, b_vals = structure_and_values(B)
+        entry = self.entry_for(a_s, b_s)
+        c = self._execute(entry, a_vals, b_vals, entry.key)
+        self._last = self._pool.get(entry.key, self._last)
         return c
 
     __call__ = multiply
@@ -208,7 +218,10 @@ class SpGEMMSession:
         self._pool[entry.key] = entry
         self._pool.move_to_end(entry.key)
         while len(self._pool) > self.max_entries:
-            self._pool.popitem(last=False)
+            old_key, old = self._pool.popitem(last=False)
+            # the plan survives on disk (if a store is configured) and the
+            # executable in the runtime LRU; only the pool slot is reclaimed
+            self._event("evict", old_key, old.model)
 
     # -- planning ----------------------------------------------------------
     def _plan_entry(self, key: str, inst) -> _Entry:
@@ -307,20 +320,36 @@ class SpGEMMSession:
         raise last_exc
 
     def _warm_labels(self, inst, model: str):
-        """Map the previous entry's labels onto this instance's vertex set.
-        Returns (labels-with--1-holes | None, drift fraction | None)."""
-        prev = self._last
-        if (
-            prev is None
-            or model == "auto"
-            or prev.model != model
-            or prev.shape != tuple(inst.shape)
-        ):
+        """Map a previous entry's labels onto this instance's vertex set.
+        Returns (labels-with--1-holes | None, drift fraction | None).
+
+        Candidates are the last-touched entry plus every pool entry with the
+        same model and shape, most recent first; the one with the lowest
+        drift wins.  Searching the pool (not just ``_last``) matters for
+        serving traffic, where several structures interleave and the drifted
+        request's true predecessor is rarely the last entry touched."""
+        if model == "auto":
+            return None, None
+        shape = tuple(inst.shape)
+        candidates, seen = [], set()
+        for ent in (self._last, *reversed(self._pool.values())):
+            if ent is None or id(ent) in seen:
+                continue
+            seen.add(id(ent))
+            if ent.model == model and ent.shape == shape:
+                candidates.append(ent)
+        if not candidates:
             return None, None
         new_keys = _vertex_keys(inst, model)
-        labels = _map_labels(prev.vertex_keys, prev.labels, new_keys)
-        drift = float((labels < 0).mean()) if len(labels) else 1.0
-        return labels, drift
+        best_labels, best_drift = None, None
+        for ent in candidates:
+            labels = _map_labels(ent.vertex_keys, ent.labels, new_keys)
+            drift = float((labels < 0).mean()) if len(labels) else 1.0
+            if best_drift is None or drift < best_drift:
+                best_labels, best_drift = labels, drift
+                if drift == 0.0:
+                    break
+        return best_labels, best_drift
 
     # -- execution ---------------------------------------------------------
     def _execute(self, entry: _Entry, a_vals, b_vals, key: str) -> np.ndarray:

@@ -105,6 +105,7 @@ def test_planning_side_imports_do_not_import_jax():
         "import repro.distributed.registry, repro.distributed.select, "
         "repro.distributed.plan_ir, repro.distributed.session; "
         "import repro.resilience, repro.testing, repro.checkpoint; "
+        "import repro.launch.serve; "
         "sys.exit(1 if 'jax' in sys.modules else 0)"
     )
     out = subprocess.run([sys.executable, "-c", code], capture_output=True)

@@ -1,0 +1,303 @@
+"""Serving-tier tests: batched value streams + the SpGEMM serving loop.
+
+Single-process parts run at p=1 (a 1-device mesh runs the full executor
+program without forced host devices): batched-vs-looped oracle equality for
+every executable model, capacity bucketing + zero-retrace inside a bucket,
+donation safety on the batched step, and the serving loop's lifecycle
+(enqueue -> batch -> evict -> drain) including admission rejection and
+scripted faults.  The same coverage at p in {4, 8} runs through the
+subprocess runner (forced host devices must not leak into this pytest
+process' jax).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUNNER = os.path.join(ROOT, "tests", "multidev_runner.py")
+
+
+def _run(case: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_DEVICES"] = str(devices)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, RUNNER, case],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("devices", [4, 8])
+def test_serve_multidev(devices):
+    """Batched executors for all four models at p in {4, 8}: oracle equality
+    vs the per-call path, zero retraces inside a capacity bucket, donation
+    safety, and a batched serving-loop window."""
+    assert f"OK serve p={devices}" in _run("serve", devices=devices)
+
+
+# ---------------------------------------------------------------------------
+# batch bucketing (jax-free)
+# ---------------------------------------------------------------------------
+def test_batch_bucket_geometric():
+    from repro.distributed.runtime import batch_bucket
+
+    assert [batch_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9)] == [
+        1, 2, 4, 4, 8, 8, 16,
+    ]
+    with pytest.raises(ValueError, match="batch size"):
+        batch_bucket(0)
+
+
+def test_compile_batch_rounds_to_bucket():
+    import repro
+    from repro.sparse.structure import random_structure
+
+    rng = np.random.default_rng(0)
+    a_s = random_structure(14, 14, 0.3, rng)
+    planned = repro.plan(a_s, a_s, p=1, model="rowwise")
+    exe = planned.compile(batch=5)
+    assert exe.batch_capacity == 8
+    # same bucket -> the identical cached AOT executable (the api-level
+    # handle is a fresh thin wrapper per compile()); p=1 keeps this cheap
+    assert planned.compile(batch=7).runtime is exe.runtime
+    assert planned.compile(batch=8).runtime is exe.runtime
+    assert planned.compile(batch=2).runtime is not exe.runtime
+
+
+# ---------------------------------------------------------------------------
+# batched oracle at p=1 (all executable models)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def operands():
+    from repro.sparse.structure import random_structure
+
+    rng = np.random.default_rng(3)
+    a_s = random_structure(16, 13, 0.25, rng)
+    b_s = random_structure(13, 15, 0.25, rng)
+    m = 4
+    av = rng.standard_normal((m, a_s.nnz)).astype(np.float32)
+    bv = rng.standard_normal((m, b_s.nnz)).astype(np.float32)
+    return a_s, b_s, av, bv
+
+
+def _dense(s, vals):
+    d = np.zeros(s.shape, np.float32)
+    d[s.coo()] = vals
+    return d
+
+
+def test_batched_matches_looped_all_models_p1(operands):
+    """compile(batch=m) over a value stack == m single compiles == oracle,
+    for every executable model."""
+    import repro
+
+    a_s, b_s, av, bv = operands
+    for model in repro.executable_models():
+        planned = repro.plan(a_s, b_s, p=1, model=model)
+        exe_one = planned.compile()
+        got = planned.compile(batch=len(av))(av, bv)
+        assert got.shape == (len(av), 16, 15), (model, got.shape)
+        for i in range(len(av)):
+            want = _dense(a_s, av[i]) @ _dense(b_s, bv[i])
+            np.testing.assert_allclose(
+                got[i], want, rtol=1e-4, atol=1e-4, err_msg=model
+            )
+            np.testing.assert_allclose(
+                exe_one(av[i], bv[i]), want, rtol=1e-4, atol=1e-4, err_msg=model
+            )
+
+
+def test_ragged_batches_share_bucket_without_retrace(operands):
+    import repro
+    from repro.distributed import runtime
+
+    a_s, b_s, av, bv = operands
+    exe = repro.plan(a_s, b_s, p=1, model="fine").compile(batch=4)
+    exe(av[:2], bv[:2])  # bucket warm
+    n0 = runtime.trace_count()
+    for m in (1, 2, 3, 4):
+        got = exe(av[:m], bv[:m])
+        assert got.shape[0] == m
+    assert runtime.trace_count() == n0, "ragged batches inside one bucket retraced"
+
+
+def test_batched_step_is_donation_safe(operands):
+    """PR 4 regression, batched flavor: repeated calls reusing the same numpy
+    value buffers must not alias donated device buffers."""
+    import repro
+
+    a_s, b_s, av, bv = operands
+    exe = repro.plan(a_s, b_s, p=1, model="fine").compile(batch=len(av))
+    av_copy, bv_copy = av.copy(), bv.copy()
+    r1 = np.asarray(exe(av, bv))
+    r2 = np.asarray(exe(av, bv))
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(av, av_copy)
+    np.testing.assert_array_equal(bv, bv_copy)
+
+
+def test_batch_overflow_and_operand_mismatch_raise(operands):
+    import repro
+
+    a_s, b_s, av, bv = operands
+    exe = repro.plan(a_s, b_s, p=1, model="rowwise").compile(batch=2)
+    with pytest.raises(ValueError, match="batch"):
+        exe(av, bv)  # 4 rows into a capacity-2 executable
+    with pytest.raises(ValueError, match="batch"):
+        exe(av[:2], bv[:1])  # mismatched A/B batch sizes
+
+
+# ---------------------------------------------------------------------------
+# serving-loop lifecycle at p=1
+# ---------------------------------------------------------------------------
+def _submit_stream(server, s, rng, count):
+    return [
+        server.submit(
+            (s, rng.standard_normal(s.nnz).astype(np.float32)),
+            (s, rng.standard_normal(s.nnz).astype(np.float32)),
+        )
+        for _ in range(count)
+    ]
+
+
+def test_serving_loop_lifecycle():
+    """enqueue -> batch -> evict -> drain: same-structure requests ride
+    batched dispatches, the pool LRU evicts (visible on session events), and
+    every completed result matches the dense oracle."""
+    from repro.launch.serve import SpGEMMServer
+    from repro.sparse.structure import random_structure
+
+    rng = np.random.default_rng(5)
+    structs = [random_structure(14, 14, 0.25, rng) for _ in range(3)]
+    server = SpGEMMServer(
+        p=1, model="rowwise", max_batch=4, batch_window=8, pool_entries=2
+    )
+    # enqueue: 6 same-structure requests sit in the queue until stepped
+    reqs = _submit_stream(server, structs[0], rng, 6)
+    assert server.queue_depth == 6 and server.stats.completed == 0
+    # batch: one window serves all 6 in ceil(6/4) = 2 dispatches
+    server.step()
+    assert server.stats.completed == 6 and server.stats.dispatches == 2
+    assert server.stats.batch_items == 6
+    for r in reqs:
+        assert r.done and r.latency_s >= 0
+        want = _dense(structs[0], r.a_vals) @ _dense(structs[0], r.b_vals)
+        np.testing.assert_allclose(r.result, want, rtol=1e-4, atol=1e-4)
+    # evict: a 2-entry pool sees a third structure -> LRU eviction event
+    _submit_stream(server, structs[1], rng, 1)
+    _submit_stream(server, structs[2], rng, 1)
+    server.drain()
+
+    def replans(kinds):
+        # same-shape structures warm-start off resident entries, so a new
+        # structure may classify warm_replan rather than cold — both are
+        # full replans as far as the pool lifecycle is concerned
+        return kinds.count("cold_replan") + kinds.count("warm_replan")
+
+    kinds = [e.kind for e in server.session.events]
+    assert replans(kinds) == 3, kinds
+    assert "evict" in kinds, kinds
+    # drain: the evicted structure must replan, a resident one pool-hits
+    _submit_stream(server, structs[2], rng, 1)  # resident -> hit
+    _submit_stream(server, structs[0], rng, 1)  # evicted -> replan again
+    served = server.drain()
+    assert served == 2 and server.queue_depth == 0
+    kinds = [e.kind for e in server.session.events]
+    assert kinds.count("hit") >= 1
+    assert replans(kinds) == 4, kinds
+    report = server.report()
+    assert report["completed"] == 10 and report["failed"] == 0
+    assert report["qps"] > 0 and report["p99_us"] >= report["p50_us"] > 0
+    assert 0 < report["batch_efficiency"] <= 1
+
+
+def test_admission_rejects_when_full():
+    from repro.launch.serve import QueueFull, SpGEMMServer
+    from repro.sparse.structure import random_structure
+
+    rng = np.random.default_rng(6)
+    s = random_structure(12, 12, 0.3, rng)
+    server = SpGEMMServer(p=1, model="rowwise", queue_limit=2)
+    _submit_stream(server, s, rng, 2)
+    with pytest.raises(QueueFull, match="capacity"):
+        _submit_stream(server, s, rng, 1)
+    assert server.stats.rejected == 1
+    server.drain()  # the admitted two still complete
+    assert server.stats.completed == 2
+
+
+def test_serve_spgemm_driver_steps_inline_on_full_queue():
+    """The offline driver submits past queue_limit by stepping inline — no
+    request is ever dropped."""
+    from repro.launch.serve import serve_spgemm
+    from repro.sparse.structure import random_structure
+
+    rng = np.random.default_rng(7)
+    s = random_structure(12, 12, 0.3, rng)
+    workload = [
+        (
+            (s, rng.standard_normal(s.nnz).astype(np.float32)),
+            (s, rng.standard_normal(s.nnz).astype(np.float32)),
+        )
+        for _ in range(9)
+    ]
+    requests, report = serve_spgemm(
+        workload, p=1, model="rowwise", queue_limit=4, max_batch=4, batch_window=4
+    )
+    assert report["completed"] == 9 and report["failed"] == 0
+    assert all(r.result is not None for r in requests)
+
+
+def test_serving_loop_retries_scripted_transient_fault():
+    from repro.launch.serve import SpGEMMServer
+    from repro.resilience import FaultPolicy
+    from repro.sparse.structure import random_structure
+    from repro.testing import faults
+
+    rng = np.random.default_rng(8)
+    s = random_structure(12, 12, 0.3, rng)
+    server = SpGEMMServer(
+        p=1, model="rowwise", max_batch=4, policy=FaultPolicy(backoff_s=0.0)
+    )
+    _submit_stream(server, s, rng, 4)
+    with faults.inject("execute", times=1) as script:
+        server.drain()
+    assert script.fired == 1
+    assert server.stats.completed == 4 and server.stats.failed == 0
+    assert any(e.kind == "retry" for e in server.session.events)
+
+
+def test_serving_loop_isolates_permanent_failure():
+    """A batch that exhausts the retry budget marks only its own requests
+    failed; the loop keeps serving the next window."""
+    from repro.launch.serve import SpGEMMServer
+    from repro.resilience import FaultPolicy
+    from repro.sparse.structure import random_structure
+    from repro.testing import faults
+    from repro.testing.faults import InjectedFault
+
+    rng = np.random.default_rng(9)
+    s = random_structure(12, 12, 0.3, rng)
+    policy = FaultPolicy(max_retries=1, backoff_s=0.0)
+    server = SpGEMMServer(p=1, model="rowwise", max_batch=4, policy=policy)
+    doomed = _submit_stream(server, s, rng, 2)
+    # fail the first attempt AND its retry: the chunk fails permanently
+    with faults.inject("execute", times=2) as script:
+        server.drain()
+    assert script.fired == 2
+    assert server.stats.failed == 2 and server.stats.completed == 0
+    assert all(isinstance(r.error, InjectedFault) and r.done for r in doomed)
+    # the loop is still alive: the next window completes normally
+    healthy = _submit_stream(server, s, rng, 2)
+    server.drain()
+    assert server.stats.completed == 2
+    assert all(r.result is not None for r in healthy)
