@@ -14,6 +14,13 @@ Cells (each instance × engine):
   planning calls) against the flat engine's best-of-S sequential seeds,
   which is the host idiom it replaces.  ``--full`` asserts >= 5x end-to-end
   with connectivity within 5%.
+- ``partition/device_coarsen`` vs ``partition/host_coarsen``: the
+  device-resident V-cycle acceptance cell.  Both sides are the same
+  ``engine="device"`` call; only the descend differs (``coarsen="auto"``
+  keeps coarsening on device, ``coarsen="host"`` forces the retained scipy
+  descend).  ``--full`` asserts >= 3x end-to-end with connectivity within
+  5%.  Device records carry phase-split columns (``coarsen_s`` /
+  ``refine_s`` / ``polish_s`` seconds at the best-timed rep).
 - a small structured cell (27-pt stencil rowwise model) so quality is
   checked on mesh-like inputs, not just ER.
 
@@ -39,6 +46,8 @@ ACCEPT_CONN = 1.05
 DEVICE_ACCEPT_SPEEDUP = 5.0  # device call vs flat best-of-S multi-start
 DEVICE_ACCEPT_CONN = 1.05
 DEVICE_BENCH_STARTS = 8  # seeds in the multi-start comparison
+COARSEN_ACCEPT_SPEEDUP = 3.0  # device-resident V-cycle vs host-coarsen descend
+COARSEN_ACCEPT_CONN = 1.05
 
 
 def _er_instance(rows: int, seed: int = 0) -> SpGEMMInstance:
@@ -127,23 +136,83 @@ def _device_cell(
     for engine, label in (("device", "device"), ("flat", f"flat_x{starts}")):
         t = best[engine]
         imb = evaluate(hg, res[engine].parts, p).comp_imbalance
-        recs.append(
-            {
-                "name": f"{name}/partition/{label}/p{p}",
-                "status": "ok",
-                "engine": engine,
-                "multi_starts": starts,
-                "us_per_call": int(t * 1e6),
-                "n_vertices": hg.n_vertices,
-                "n_nets": hg.n_nets,
-                "n_pins": hg.n_pins,
-                "pins_per_sec": int(hg.n_pins / max(t, 1e-9)),
-                "connectivity": int(res[engine].connectivity),
-                "comp_imbalance": round(float(imb), 4),
-                "speedup_vs_flat_multistart": round(speedup, 2),
-                "conn_vs_flat_multistart": round(conn_ratio, 3),
-            }
-        )
+        rec = {
+            "name": f"{name}/partition/{label}/p{p}",
+            "status": "ok",
+            "engine": engine,
+            "multi_starts": starts,
+            "us_per_call": int(t * 1e6),
+            "n_vertices": hg.n_vertices,
+            "n_nets": hg.n_nets,
+            "n_pins": hg.n_pins,
+            "pins_per_sec": int(hg.n_pins / max(t, 1e-9)),
+            "connectivity": int(res[engine].connectivity),
+            "comp_imbalance": round(float(imb), 4),
+            "speedup_vs_flat_multistart": round(speedup, 2),
+            "conn_vs_flat_multistart": round(conn_ratio, 3),
+        }
+        rec.update(_phase_cols(res[engine]))
+        recs.append(rec)
+    return recs
+
+
+def _phase_cols(res) -> dict:
+    """Phase-split columns for device-engine records: seconds spent in the
+    descend (``coarsen_s``), the batched device refinement (``refine_s``)
+    and the host K-way polish (``polish_s``).  Host engines carry no phase
+    breakdown and get no columns."""
+    phases = getattr(res, "phases", None)
+    if not phases:
+        return {}
+    return {k: round(float(v), 4) for k, v in sorted(phases.items())}
+
+
+def _coarsen_cell(
+    hg, p: int, name: str, repeats: int = 3, eps: float = 0.10
+) -> list[dict]:
+    """Device-resident coarsening acceptance cell: the same
+    ``engine="device"`` call with the descend on device
+    (``coarsen="auto"``) against forced host coarsening
+    (``coarsen="host"``, the retained scipy descend).  Both sides share the
+    batched refinement and host polish, so the column isolates what keeping
+    the V-cycle on device buys end to end."""
+    for mode in ("auto", "host"):  # warm both jit cache paths
+        partition(hg, p, eps=eps, seed=0, engine="device", coarsen=mode)
+    best = {"auto": float("inf"), "host": float("inf")}
+    res = {}
+    phases = {}
+    for _rep in range(repeats):
+        for mode in ("auto", "host"):
+            t0 = time.perf_counter()
+            r = partition(hg, p, eps=eps, seed=0, engine="device", coarsen=mode)
+            dt = time.perf_counter() - t0
+            if dt < best[mode]:
+                best[mode] = dt
+                phases[mode] = _phase_cols(r)
+            res[mode] = r
+    speedup = best["host"] / max(best["auto"], 1e-9)
+    conn_ratio = res["auto"].connectivity / max(res["host"].connectivity, 1)
+    recs = []
+    for mode, label in (("auto", "device_coarsen"), ("host", "host_coarsen")):
+        t = best[mode]
+        imb = evaluate(hg, res[mode].parts, p).comp_imbalance
+        rec = {
+            "name": f"{name}/partition/{label}/p{p}",
+            "status": "ok",
+            "engine": "device",
+            "coarsen": mode,
+            "us_per_call": int(t * 1e6),
+            "n_vertices": hg.n_vertices,
+            "n_nets": hg.n_nets,
+            "n_pins": hg.n_pins,
+            "pins_per_sec": int(hg.n_pins / max(t, 1e-9)),
+            "connectivity": int(res[mode].connectivity),
+            "comp_imbalance": round(float(imb), 4),
+            "speedup_vs_host_coarsen": round(speedup, 2),
+            "conn_vs_host_coarsen": round(conn_ratio, 3),
+        }
+        rec.update(phases[mode])
+        recs.append(rec)
     return recs
 
 
@@ -175,6 +244,9 @@ def run(out_dir: str | None = None, quick: bool = True) -> list[dict]:
     else:
         name = "er5k" if quick else "er10k"
         records += _device_cell(er, 16, name)
+        # device-resident coarsening cell: device vs host descend inside the
+        # same engine="device" call (the V-cycle residency acceptance)
+        records += _coarsen_cell(er, 16, name)
     if not quick:
         rec = records[0]
         assert rec["balance_feasibility_identical"], "balance feasibility diverged"
@@ -195,6 +267,18 @@ def run(out_dir: str | None = None, quick: bool = True) -> list[dict]:
         assert dev[0]["conn_vs_flat_multistart"] <= DEVICE_ACCEPT_CONN, (
             f"device connectivity {dev[0]['conn_vs_flat_multistart']}x the "
             f"flat multi-start winner (acceptance: <= {DEVICE_ACCEPT_CONN})"
+        )
+        resident = [r for r in records if r.get("coarsen") == "auto"]
+        assert resident, "device-coarsening acceptance cell missing"
+        assert resident[0]["speedup_vs_host_coarsen"] >= COARSEN_ACCEPT_SPEEDUP, (
+            f"device-resident coarsening only "
+            f"{resident[0]['speedup_vs_host_coarsen']}x the host-coarsen "
+            f"descend on er10k (acceptance: >= {COARSEN_ACCEPT_SPEEDUP}x)"
+        )
+        assert resident[0]["conn_vs_host_coarsen"] <= COARSEN_ACCEPT_CONN, (
+            f"device-resident connectivity "
+            f"{resident[0]['conn_vs_host_coarsen']}x the host-coarsen result "
+            f"(acceptance: <= {COARSEN_ACCEPT_CONN})"
         )
     if out_dir and not quick:
         # only the full acceptance run refreshes the committed artifact;

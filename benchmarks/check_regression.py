@@ -14,7 +14,12 @@ than the tolerance also fails, and a cell whose throughput
 (``pins_per_sec`` planning rate, serving-loop ``qps``) drops below the
 machine-scaled baseline floor fails too — the gate guards the
 speed/quality claim of the partitioner and the serving tier's QPS/p99
-headline, not just wall time.
+headline, not just wall time.  Engine-vs-engine speedup ratios
+(``speedup_vs_host_coarsen``, the device-resident V-cycle's end-to-end
+win over the host descend — coarsening included) are floor-gated
+*without* machine scaling: both sides of a ratio are timed interleaved on
+the same host, so the machine factor cancels and the ratio is the one
+number immune to a slow runner.
 
 CI usage:
     PYTHONPATH=src:. python benchmarks/check_regression.py partition plan
@@ -49,6 +54,10 @@ TOLERANCE = {"exec": 2.0, "serve": 2.0}
 #: throughput fields floor-gated per cell (same machine-factor scaling the
 #: timing ceiling gets): partitioner planning rate, serving-loop QPS
 THROUGHPUT_FIELDS = ("pins_per_sec", "qps")
+#: engine-vs-engine speedup ratios floor-gated with NO machine scaling —
+#: both sides are timed interleaved on one host so the factor cancels.
+#: A cell pair carries the ratio on both records; it is gated once.
+RATIO_FLOOR_FIELDS = ("speedup_vs_host_coarsen",)
 
 
 def _suite_records(suite: str) -> list[dict]:
@@ -138,6 +147,7 @@ def check(suite: str, tolerance: float, min_us: int, cur_cal: int) -> list[str]:
     factor = max(cur_cal / max(base["calibration_us"], 1), 1.0)
     records = _suite_records(suite)
     failures = []
+    gated_ratios: set[str] = set()
     for rec in records:
         if rec.get("status") != "ok" or rec["name"] not in base_by_name:
             continue
@@ -178,6 +188,23 @@ def check(suite: str, tolerance: float, min_us: int, cur_cal: int) -> list[str]:
                         f"{rec['name']}: {field} {rec.get(field, 0)} "
                         f"< floor {int(floor)} (baseline {ref[field]})"
                     )
+        # same-host speedup ratios (machine factor cancels, no scaling)
+        for field in RATIO_FLOOR_FIELDS:
+            if not ref.get(field) or field in gated_ratios:
+                continue
+            gated_ratios.add(field)
+            floor = ref[field] / (1 + tolerance)
+            verdict = "FAIL" if rec.get(field, 0) < floor else "ok"
+            print(
+                f"[{suite}] {verdict:4s} {rec['name']}: {field} "
+                f"{rec.get(field, 0)} (baseline {ref[field]}, "
+                f"floor {floor:.2f})"
+            )
+            if rec.get(field, 0) < floor:
+                failures.append(
+                    f"{rec['name']}: {field} {rec.get(field, 0)} "
+                    f"< floor {floor:.2f} (baseline {ref[field]})"
+                )
     return failures
 
 

@@ -338,6 +338,7 @@ def _plan_one(
     engine: str = "flat",
     warm_start: np.ndarray | None = None,
     warm_drift_limit: float = 0.5,
+    coarsen: str = "auto",
 ) -> PlannedSpGEMM:
     spec = get_spec(model)
     hg = spec.build(inst, include_nz=include_nz)
@@ -349,6 +350,7 @@ def _plan_one(
         engine=engine,
         warm_start=warm_start,
         warm_drift_limit=warm_drift_limit,
+        coarsen=coarsen,
     )
     plan_obj = None
     if spec.lower is not None and (not include_nz or spec.lower_include_nz):
@@ -374,6 +376,7 @@ def plan(
     name: str = "",
     include_nz: bool = False,
     engine: str = "flat",
+    coarsen: str = "auto",
 ) -> PlannedSpGEMM:
     """Plan a distributed SpGEMM: model the instance, partition, lower.
 
@@ -392,7 +395,10 @@ def plan(
     ``engine`` selects the partitioner engine (``"flat"`` host default,
     ``"device"`` for the batched jax engine above its size threshold,
     ``"loop"`` for the per-move reference — see DESIGN.md §6); it changes
-    planning *speed*, not the plan contract.
+    planning *speed*, not the plan contract.  ``coarsen`` picks the
+    ``engine="device"`` descend (``"auto"``/``"device"`` keep the V-cycle
+    device-resident, ``"host"`` forces the host-scipy descend) and is
+    ignored by the host engines.
     """
     if isinstance(A, SpGEMMInstance):
         if B is not None:
@@ -405,9 +411,11 @@ def plan(
     if model != "auto":
         if model not in MODELS:
             raise ValueError(f"unknown model {model!r}; choose from {MODELS} or 'auto'")
-        return _plan_one(inst, model, p, eps, seed, include_nz, engine)
+        return _plan_one(
+            inst, model, p, eps, seed, include_nz, engine, coarsen=coarsen
+        )
     candidates = [
-        _plan_one(inst, m, p, eps, seed, include_nz, engine)
+        _plan_one(inst, m, p, eps, seed, include_nz, engine, coarsen=coarsen)
         for m in executable_models()
     ]
     records = []

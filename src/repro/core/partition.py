@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+import time
 import warnings
 from collections import deque
 
@@ -73,6 +74,8 @@ class PartitionResult:
     p: int
     connectivity: int  # final objective value
     warm: bool = False  # produced by the warm-start path (label reuse)
+    phases: dict | None = None  # per-phase seconds (device engines):
+    # {"coarsen_s", "refine_s", "polish_s"}
 
 
 # device-engine fallback reasons already warned about (warn once per reason
@@ -95,16 +98,26 @@ def _similarity(hg: Hypergraph, dtype=np.float64) -> sp.spmatrix:
     """sim(u, v) = sum over shared (small) nets of c(n)/(|n| - 1), with the
     diagonal kept (callers mask it entry-wise).  The result is symmetric, so
     callers may read its compressed-axis structure as rows whether scipy
-    hands back CSR or CSC."""
+    hands back CSR or CSC.
+
+    Builds the weighted incidence directly in CSR form — nets are already
+    pin-sorted, so filtering is a mask over the cached ``pin_nets()``
+    expansion (hoisted, one gather) and the indptr a prefix sum over the
+    filtered sizes.  The old per-level COO round trip paid a full
+    sort-by-row in ``tocsr()`` for structure the level already had."""
     sizes = hg.net_sizes()
     ok = (sizes > 1) & (sizes <= BIG_NET)
-    net_ids = hg.pin_nets()
-    keep = ok[net_ids]
-    rows, cols = net_ids[keep], hg.net_pins[keep]
-    w = np.sqrt(
-        hg.net_cost[rows].astype(dtype) / np.maximum(sizes[rows] - 1, 1).astype(dtype)
+    wfac = np.zeros(hg.n_nets, dtype=dtype)
+    wfac[ok] = np.sqrt(
+        hg.net_cost[ok].astype(dtype) / np.maximum(sizes[ok] - 1, 1).astype(dtype)
     )
-    W = sp.coo_matrix((w, (rows, cols)), shape=(hg.n_nets, hg.n_vertices)).tocsr()
+    net_ids = hg.pin_nets()  # cached expansion, hoisted out of the filter
+    keep = ok[net_ids]
+    indptr = np.concatenate([[0], np.cumsum(np.where(ok, sizes, 0))])
+    W = sp.csr_matrix(
+        (wfac[net_ids[keep]], hg.net_pins[keep], indptr),
+        shape=(hg.n_nets, hg.n_vertices),
+    )
     S = W.T @ W
     if S.format not in ("csr", "csc"):
         S = S.tocsr()
@@ -606,10 +619,158 @@ def _global_vcycle(
     return levels, cur
 
 
+# resident-path refinement schedule: the descend happens on device, so the
+# ascent can winnow hard — a full multi-round sweep at the coarsest level
+# picks the surviving start, intermediate levels get short touch-up passes,
+# and one finest-level round settles the expansion before the host K-way
+# polish (the exactness authority — it alone sees the big nets the device
+# view filters out)
+RESIDENT_MID_STARTS = 1  # starts surviving past the coarsest sweep.  The
+# coarsest level's pin count is barely below the mid levels' (nets keep most
+# of their distinct-cluster pins), so every surviving start pays near-full
+# freight per mid round; measured on er10k/p16 the runner-up never overtakes
+# the coarse winner during the short mid sweeps, so carrying it is pure cost
+RESIDENT_MID_ROUNDS = 2  # LP rounds per intermediate level
+RESIDENT_COARSE_STARTS = 3  # independent LPT starts at the coarsest level;
+# all of them must finish the full coarse sweep before the winnow — cutting
+# the sweep short picks survivors on scores that have not separated yet and
+# costs several percent of final connectivity
+RESIDENT_COARSE_ROUNDS = 4  # LP rounds at the coarsest level
+RESIDENT_FINE_ROUNDS = 1  # winner-only LP rounds at the finest level: one
+# start costs a fraction of a mid sweep even at the costliest pins, settles
+# the expansion locally, and buys back the connectivity the shortened host
+# polish below would otherwise leave on the table
+RESIDENT_KWAY_ROUNDS = 4  # host polish rounds after the device V-cycle —
+# the fine-level touch-up hands kway a start where the last round barely
+# moves, so the polish budget drops below the host path's 5 without giving
+# back the quality the cap enforces (small instances keep the full budget:
+# their rounds are nearly free and the device sweep is their exploration)
+RESIDENT_TARGET = 75  # stop descending near TARGET * p vertices (a shallow
+# two-contraction hierarchy: deeper ones buy little quality once the host
+# polish runs, but each extra level costs pin-sized kernels both ways)
+
+
 def _partition_device(
+    hg: Hypergraph, p: int, part_cap: float, seed: int, rd, coarsen: str = "auto"
+) -> tuple[np.ndarray, dict]:
+    """Device-engine dispatcher.  ``coarsen="auto"``/``"device"`` runs the
+    fully device-resident V-cycle (``core/coarsen_device.py``); ``"host"``
+    keeps the PR-6 host-scipy descend.  Device-coarsening import or runtime
+    failure degrades to host coarsening with a once-per-process warning —
+    the same contract as the engine-level jax fallback."""
+    if coarsen != "host":
+        cd = None
+        try:
+            cd = importlib.import_module("repro.core.coarsen_device")
+        except ImportError:
+            _warn_fallback(
+                "coarsen_import",
+                "device coarsening unavailable; falling back to host "
+                "coarsening for engine='device'",
+            )
+        if cd is not None:
+            try:
+                return _partition_device_resident(hg, p, part_cap, seed, rd, cd)
+            except Exception as exc:
+                _warn_fallback(
+                    "coarsen_runtime",
+                    f"device coarsening failed ({exc!r}); falling back to "
+                    "host coarsening for engine='device'",
+                )
+    return _partition_device_hostcoarsen(hg, p, part_cap, seed, rd)
+
+
+def _partition_device_resident(
+    hg: Hypergraph, p: int, part_cap: float, seed: int, rd, cd
+) -> tuple[np.ndarray, dict]:
+    """Fully device-resident V-cycle: descend (cluster + contract) and
+    ascend (batched multi-seed refinement) both run as jitted kernels over
+    bucket-padded device arrays; per level only two shape scalars cross to
+    the host, and only the winning finest-level labels transfer back for
+    the ``kway_refine`` polish."""
+    jnp = rd.jnp  # partition.py itself must import without jax
+    t0 = time.perf_counter()
+    total = float(hg.w_comp.sum())
+    cluster_cap = max(min(total / 10, part_cap / 4), float(hg.w_comp.max()))
+    glob_target = max(256, RESIDENT_TARGET * p)
+    levels = [cd.finest_level(hg)]
+    cmaps = []
+    while (
+        levels[-1].n_vertices > glob_target and len(cmaps) < cd.MAX_LEVELS
+    ):
+        out = cd.coarsen_level(levels[-1], cluster_cap, seed, len(cmaps))
+        if out is None:  # stalled or shape guard tripped: stop descending
+            break
+        coarse, cmap, _ = out
+        levels.append(coarse)
+        cmaps.append(cmap)
+    t1 = time.perf_counter()
+
+    cur = levels[-1]
+    w_host = np.asarray(cur.args[3])[: cur.n_vertices]
+    small = not cmaps or hg.n_vertices <= SMALL_DIRECT
+    starts = rd.DEVICE_STARTS if small else RESIDENT_COARSE_STARTS
+    init = np.zeros((starts, cur.nb), np.int32)
+    init[:, : cur.n_vertices] = rd.initial_partitions_raw(w_host, p, seed, starts)
+    rounds = 3 * rd.ROUNDS_COARSE if small else RESIDENT_COARSE_ROUNDS
+    batch, scores = rd.refine_args(
+        cur.nb, cur.mb, cur.pb, cur.args, init, p, part_cap, rounds, seed, 0,
+    )
+    # small instances keep the full-width ascent the host-coarsening path
+    # gives them (every start, tripled rounds): their rounds are nearly
+    # free, while the schedule constants are tuned at scale, where every
+    # extra start pays near-full pin freight per level
+    keep = starts if small else RESIDENT_MID_STARTS
+    mid_rounds = 3 * rd.ROUNDS_MID if small else RESIDENT_MID_ROUNDS
+    fine_rounds = 3 * rd.ROUNDS_FINE if small else RESIDENT_FINE_ROUNDS
+    if cmaps:
+        # winnow and expand without leaving the device: argsort over a
+        # handful of per-start scores is free there, and skipping the host
+        # round-trip per level keeps the ascent a single async dispatch
+        # stream until the final winner transfer
+        order = jnp.argsort(scores)
+        batch = batch[order[:keep]]
+        scores = scores[order[:keep]]
+        for li in range(len(levels) - 2, 0, -1):
+            lvl = levels[li]
+            batch = batch[:, cmaps[li]]
+            batch, scores = rd.refine_args(
+                lvl.nb, lvl.mb, lvl.pb, lvl.args, batch, p, part_cap,
+                mid_rounds, seed, li + 1,
+            )
+    winner = batch[jnp.argmin(scores)]
+    if cmaps:
+        winner = winner[cmaps[0]]
+        if fine_rounds > 0:
+            # a short winner-only touch-up at the finest level: at one start
+            # it costs a fraction of a mid sweep and hands the host polish a
+            # start that is already locally settled (salt: li never reaches
+            # len(levels) in the mid loop, so the stream is fresh)
+            lvl = levels[0]
+            wb, _ = rd.refine_args(
+                lvl.nb, lvl.mb, lvl.pb, lvl.args, winner[None], p, part_cap,
+                fine_rounds, seed, len(levels),
+            )
+            winner = wb[0]
+    parts = np.asarray(winner)[: hg.n_vertices].astype(np.int64)
+    t2 = time.perf_counter()
+    parts = kway_refine(
+        hg, parts, p, part_cap,
+        **({} if small else {"max_rounds": RESIDENT_KWAY_ROUNDS}),
+    )
+    t3 = time.perf_counter()
+    return parts, {
+        "coarsen_s": t1 - t0,
+        "refine_s": t2 - t1,
+        "polish_s": t3 - t2,
+    }
+
+
+def _partition_device_hostcoarsen(
     hg: Hypergraph, p: int, part_cap: float, seed: int, rd
-) -> np.ndarray:
-    """Device-engine driver: host V-cycle + batched multi-seed device
+) -> tuple[np.ndarray, dict]:
+    """PR-6 device driver, retained as the device-coarsening fallback and
+    the bench baseline: host scipy V-cycle + batched multi-seed device
     refinement at every level + best-seed host polish.
 
     The whole multi-start batch (``rd.DEVICE_STARTS`` seeds) moves through
@@ -618,7 +779,9 @@ def _partition_device(
     device score (filtered-net connectivity + infeasibility penalty) and
     only the winner pays the host ``kway_refine`` polish — which also
     restores exactness for the big nets the device view filters out."""
+    t0 = time.perf_counter()
     levels, cur = _global_vcycle(hg, p, part_cap)
+    t1 = time.perf_counter()
     batch = rd.initial_partitions(cur, p, seed)
     # sub-threshold instances only reach this path when tests force the
     # engine; rounds are nearly free at those sizes (and when the V-cycle
@@ -635,7 +798,14 @@ def _partition_device(
             fine, batch, p, part_cap, boost * rounds, seed=seed, salt=li + 1
         )
     parts = batch[int(np.argmin(scores))].astype(np.int64)
-    return kway_refine(hg, parts, p, part_cap)
+    t2 = time.perf_counter()
+    parts = kway_refine(hg, parts, p, part_cap)
+    t3 = time.perf_counter()
+    return parts, {
+        "coarsen_s": t1 - t0,
+        "refine_s": t2 - t1,
+        "polish_s": t3 - t2,
+    }
 
 
 def _warm_partition(
@@ -682,6 +852,7 @@ def partition(
     engine: str = "flat",
     warm_start: np.ndarray | None = None,
     warm_drift_limit: float = 0.5,
+    coarsen: str = "auto",
 ) -> PartitionResult:
     """K-way partition via recursive bisection (+ a direct K-way pass).
 
@@ -697,11 +868,17 @@ def partition(
     recursive bisection directly on the fine hypergraph, re-coarsening each
     subproblem with pairwise matching.
 
-    ``engine="device"`` batches the whole multi-start search into one jitted
-    jax call per V-cycle level (``core/refine_device.py``); sizes at or
-    below ``DEVICE_MIN_VERTICES`` use the flat quality path unchanged, and a
+    ``engine="device"`` keeps the whole V-cycle on device: coarsening
+    (``core/coarsen_device.py``) and batched multi-start refinement
+    (``core/refine_device.py``) run as jitted kernels per level, with only
+    the final labels crossing back for the host polish.  ``coarsen``
+    selects the descend: ``"auto"``/``"device"`` use the device kernels
+    (degrading to host coarsening with a warning when unavailable),
+    ``"host"`` forces the PR-6 host-scipy V-cycle.  Sizes at or below
+    ``DEVICE_MIN_VERTICES`` use the flat quality path unchanged, and a
     missing (or failing) jax degrades to ``engine="flat"`` with a
-    once-per-process warning.
+    once-per-process warning.  Device results carry a ``phases`` dict
+    (coarsen / refine / polish seconds).
 
     ``warm_start``: previous labels aligned to this hypergraph's vertices
     (entries outside ``[0, p)`` = unmapped after drift).  When reuse is
@@ -716,6 +893,8 @@ def partition(
     faults.fire("partition")
     if engine not in ("flat", "loop", "device"):
         raise ValueError(f"unknown partition engine {engine!r}")
+    if coarsen not in ("auto", "device", "host"):
+        raise ValueError(f"unknown coarsen mode {coarsen!r}")
     if warm_start is not None and hg.n_vertices:
         if p == 1:
             parts = np.zeros(hg.n_vertices, dtype=np.int64)
@@ -741,7 +920,9 @@ def partition(
             total = float(hg.w_comp.sum())
             part_cap = max((1 + eps) * total / p, float(hg.w_comp.max()))
             try:
-                parts = _partition_device(hg, p, part_cap, seed, rd)
+                parts, phases = _partition_device(
+                    hg, p, part_cap, seed, rd, coarsen
+                )
             except Exception as exc:
                 # device-runtime failure (OOM, kernel error): the host flat
                 # engine is the authoritative fallback, not a hard stop
@@ -752,7 +933,9 @@ def partition(
                 )
             else:
                 conn = evaluate(hg, parts, p).connectivity
-                return PartitionResult(parts=parts, p=p, connectivity=conn)
+                return PartitionResult(
+                    parts=parts, p=p, connectivity=conn, phases=phases
+                )
         engine = "flat"
     rng = np.random.default_rng(seed)
     parts = np.zeros(hg.n_vertices, dtype=np.int64)

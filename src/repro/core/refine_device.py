@@ -52,6 +52,7 @@ used to cost a full partition call per seed.
 """
 from __future__ import annotations
 
+import heapq
 import os
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -68,6 +69,8 @@ __all__ = [
     "ROUNDS_MID",
     "ROUNDS_FINE",
     "initial_partitions",
+    "initial_partitions_raw",
+    "refine_args",
     "refine_batch",
     "trace_count",
 ]
@@ -118,17 +121,28 @@ class _PaddedLevel:
     mb: int  # net bucket (includes 1 phantom net)
     pb: int  # pin bucket
     args: tuple  # device arrays handed to the kernel
+    vinv: object = None  # (pb,) inverse of vperm (used by coarsen_device)
 
 
-def _pad_level(hg: Hypergraph, max_net: int = MAX_DEVICE_NET) -> _PaddedLevel:
+def _pad_level(
+    hg: Hypergraph, max_net: int = MAX_DEVICE_NET, bucket=None
+) -> _PaddedLevel:
     """Big-net-filtered, bucket-padded device view of one level.
 
-    Cached on the hypergraph object: repeated partition calls on the same
-    level skip the rebuild (the V-cycle's coarse levels are fresh objects
-    per call, but the finest level — the largest pad — is the caller's)."""
-    cached = getattr(hg, "_device_pad", None)
-    if cached is not None and cached[0] == max_net:
-        return cached[1]
+    ``bucket`` overrides the shape-bucket function (default: the ×1.5
+    ladder ``_bucket``; the device-resident V-cycle passes its tighter
+    quantizer so the finest level — the largest pad by far — stops paying
+    up to 50% shape waste in every cluster/contract kernel).
+
+    Cached on the hypergraph object per bucket function: repeated partition
+    calls on the same level skip the rebuild (the V-cycle's coarse levels
+    are fresh objects per call, but the finest level is the caller's)."""
+    key = (max_net, getattr(bucket, "__name__", "_bucket"))
+    cache = getattr(hg, "_device_pad", None)
+    if cache is not None and key in cache:
+        return cache[key]
+    if bucket is None:
+        bucket = _bucket
     sizes = hg.net_sizes()
     keep = (sizes >= 1) & (sizes <= min(max_net, LANE_NET_CAP))
     kn = np.flatnonzero(keep)
@@ -137,7 +151,7 @@ def _pad_level(hg: Hypergraph, max_net: int = MAX_DEVICE_NET) -> _PaddedLevel:
     net_pins_f = hg.net_pins[np.repeat(keep, sizes)]
     npins_f = len(net_pins_f)
     n, m = hg.n_vertices + 1, len(kn) + 1  # + phantom vertex / net
-    nb, mb, pb = _bucket(n), _bucket(m), _bucket(max(npins_f, 1))
+    nb, mb, pb = bucket(n), bucket(m), bucket(max(npins_f, 1))
     pin_nets_f = np.repeat(np.arange(len(kn), dtype=np.int64), kept_sizes)
 
     pin_nets = np.full(pb, mb - 1, np.int32)
@@ -176,12 +190,17 @@ def _pad_level(hg: Hypergraph, max_net: int = MAX_DEVICE_NET) -> _PaddedLevel:
     vptr[n + 1 :] = vp[-1]
     vnets = np.full(pb, mb - 1, np.int32)
     vnets[:npins_f] = pin_nets_f[order]
+    # inverse of vperm: vertex-order position of each net-order slot; the
+    # coarsening kernel uses it to transport per-leader budgets to net slots
+    vinv = np.empty(pb, np.int32)
+    vinv[vperm] = np.arange(pb, dtype=np.int32)
 
     J = jnp.asarray
     pl = _PaddedLevel(
         nb=nb,
         mb=mb,
         pb=pb,
+        vinv=J(vinv),
         args=(
             J(pin_nets),
             J(net_pins),
@@ -199,7 +218,9 @@ def _pad_level(hg: Hypergraph, max_net: int = MAX_DEVICE_NET) -> _PaddedLevel:
         ),
     )
     try:
-        hg._device_pad = (max_net, pl)
+        if cache is None:
+            hg._device_pad = cache = {}
+        cache[key] = pl
     except AttributeError:  # exotic containers without a __dict__
         pass
     return pl
@@ -283,6 +304,19 @@ def _make_refiner(nb: int, mb: int, pb: int, p: int, rounds: int):
                     _hash_u32(vids, salt ^ jnp.uint32(0x165667B1) ^ ri) >> 8
                 ).astype(jnp.float32) / jnp.float32(1 << 24)
                 accept = want & (u01 < acc)
+                # exact capacity guard: the thinning only matches *expected*
+                # inflow to headroom, so without it some part overshoots the
+                # cap almost every round and the feasible snapshot can
+                # starve (fatal at coarse levels, where one cluster can
+                # outweigh the whole headroom).  A per-target running prefix
+                # admits arrivals greedily in vertex order and keeps every
+                # round feasible by construction.
+                pre = jnp.cumsum(
+                    jnp.where(cand_onehot & accept[:, None], w[:, None], 0.0),
+                    axis=0,
+                )
+                pre_v = jnp.take_along_axis(pre, cand[:, None], 1)[:, 0]
+                accept = accept & (pre_v <= headroom[cand])
                 parts = jnp.where(accept, cand, parts)
                 return (parts, part_weights(parts), best_parts, best_sc)
 
@@ -317,20 +351,77 @@ def _get_refiner(nb: int, mb: int, pb: int, p: int, rounds: int):
 
 
 # -- public entry points ------------------------------------------------------
+def initial_partitions_raw(
+    w: np.ndarray, p: int, seed: int, starts: int = DEVICE_STARTS
+) -> np.ndarray:
+    """(starts, len(w)) int32 balanced random partitions over raw vertex
+    weights — the weight-only core of ``initial_partitions``, usable on a
+    coarse device level without materializing a host ``Hypergraph``.
+
+    Placement is longest-processing-time greedy (heaviest remaining vertex
+    into the lightest part) rather than shuffled prefix chunking: at a
+    coarse level single clusters weigh a sizeable fraction of a part, and
+    chunked binning overshoots the balance cap at almost every boundary —
+    an infeasible start the capped device refiner can never repair (its
+    best-feasible snapshot never fires and the whole ascent freezes).  LPT
+    keeps the max part within one small item of perfect balance.  Start
+    diversity comes from a per-seed multiplicative jitter on the ordering
+    weights, so each start descends in a different near-LPT order.
+
+    The lightest-part pick runs on a 16-ish-entry heap of ``(weight, part)``
+    tuples: heap order (min weight, then min part id) matches ``argmin``'s
+    first-minimum tie-break exactly, so placements are identical to the
+    naive scan at a fraction of the per-vertex cost."""
+    w = np.asarray(w, dtype=np.float64)
+    n = len(w)
+    batch = np.zeros((starts, n), np.int32)
+    wl = w.tolist()
+    for s in range(starts):
+        rng = np.random.default_rng((seed, s))
+        order = np.argsort(-(w * (1.0 + 0.25 * rng.random(n))), kind="stable")
+        heap = [(0.0, t) for t in range(p)]
+        row = batch[s]
+        for v in order.tolist():
+            wt, t = heap[0]
+            row[v] = t
+            heapq.heapreplace(heap, (wt + wl[v], t))
+    return batch
+
+
 def initial_partitions(
     hg: Hypergraph, p: int, seed: int, starts: int = DEVICE_STARTS
 ) -> np.ndarray:
     """(starts, n_vertices) int32 balanced random partitions — the batch of
     independent starts the kernel refines side by side."""
-    w = hg.w_comp.astype(np.float64)
-    batch = np.zeros((starts, hg.n_vertices), np.int32)
-    for s in range(starts):
-        rng = np.random.default_rng((seed, s))
-        perm = rng.permutation(hg.n_vertices)
-        cum = np.cumsum(w[perm])
-        total = cum[-1] if len(cum) and cum[-1] > 0 else 1.0
-        batch[s, perm] = np.minimum((cum / total * p).astype(np.int64), p - 1)
-    return batch
+    return initial_partitions_raw(hg.w_comp, p, seed, starts)
+
+
+def refine_args(
+    nb: int,
+    mb: int,
+    pb: int,
+    args: tuple,
+    parts_b,
+    p: int,
+    part_cap: float,
+    rounds: int,
+    seed: int = 0,
+    salt: int = 0,
+):
+    """Device-resident refinement on a padded level's raw arrays.
+
+    ``args`` is the 13-array padded-level layout of ``_pad_level`` (or a
+    coarse level contracted on device by ``coarsen_device``); ``parts_b`` is
+    an already-padded ``(starts, nb)`` batch (numpy or device array).  The
+    returned ``(batch, scores)`` stay on device — no host round trip between
+    V-cycle levels."""
+    starts = parts_b.shape[0]
+    fn = _get_refiner(nb, mb, pb, p, rounds)
+    mix = ((seed * 0x85EBCA77) ^ (salt * 0xC2B2AE35)) & 0xFFFFFFFF
+    salts = (
+        jnp.arange(starts, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
+    ) ^ jnp.uint32(mix)
+    return fn(jnp.asarray(parts_b), *args, jnp.float32(part_cap), salts)
 
 
 def refine_batch(
@@ -349,12 +440,9 @@ def refine_batch(
     across seeds, so ``argmin`` picks the winner."""
     pl = _pad_level(hg)
     starts = parts_batch.shape[0]
-    fn = _get_refiner(pl.nb, pl.mb, pl.pb, p, rounds)
     padded = np.zeros((starts, pl.nb), np.int32)
     padded[:, : hg.n_vertices] = parts_batch
-    mix = ((seed * 0x85EBCA77) ^ (salt * 0xC2B2AE35)) & 0xFFFFFFFF
-    salts = (
-        jnp.arange(starts, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
-    ) ^ jnp.uint32(mix)
-    bp, bs = fn(jnp.asarray(padded), *pl.args, jnp.float32(part_cap), salts)
+    bp, bs = refine_args(
+        pl.nb, pl.mb, pl.pb, pl.args, padded, p, part_cap, rounds, seed, salt
+    )
     return np.asarray(bp)[:, : hg.n_vertices], np.asarray(bs)

@@ -42,6 +42,7 @@ def test_plan_signature_is_pinned():
     sig = inspect.signature(repro.plan)
     assert list(sig.parameters) == [
         "A", "B", "p", "model", "eps", "seed", "name", "include_nz", "engine",
+        "coarsen",
     ]
     defaults = {
         k: v.default
@@ -57,6 +58,7 @@ def test_plan_signature_is_pinned():
         "name": "",
         "include_nz": False,
         "engine": "flat",
+        "coarsen": "auto",
     }
 
 
