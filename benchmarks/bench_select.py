@@ -1,12 +1,13 @@
 """End-to-end model selection sweep: predicted vs measured communication.
 
-For each AMG/LP/MCL instance, partition *every* hypergraph model, lower the
-executable ones (rowwise, outer, monoC, fine) to plans, count the words
-their routing tables ship, and — when the process owns enough devices — run
-the executors against the dense oracle.  The suite's acceptance assertion is
+For each AMG/LP/MCL instance, partition *every* hypergraph model, lower all
+seven (the full registry is executable) to plans, count the words their
+routing tables ship, and — when the process owns enough devices — run the
+executors against the dense oracle.  The suite's acceptance assertion is
 the paper's central claim made executable: for the replicated-free plans
-(fine-grained and monochrome-C) the measured words equal the connectivity
-metric the partitioner minimized, exactly.
+(fine-grained and the monochrome family) the measured words equal the
+connectivity metric the partitioner minimized, exactly; rowwise/columnwise
+match through their nnz-weighted useful words.
 
 Run standalone with forced host devices to exercise the executors:
 

@@ -35,13 +35,14 @@ import time
 import numpy as np
 
 BASELINE_DIR = os.path.join("experiments", "baselines")
-SUITES = ("partition", "plan", "exec", "session", "serve")
+SUITES = ("partition", "plan", "exec", "session", "serve", "versus")
 MIN_US = {
     "partition": 5_000,
     "plan": 2_500,
     "exec": 1_000,
     "session": 2_000,
     "serve": 100,
+    "versus": 5_000,
 }
 # per-suite slowdown allowance overriding the CLI/global default: exec/serve
 # cells time multi-host-device collectives whose scheduling jitter is far
@@ -89,6 +90,13 @@ def _suite_records(suite: str) -> list[dict]:
         # serving tier: batched-stream speedup + warmed serving-loop QPS/p99
         # (multidev CI job; single-device runs emit only skip cells)
         from benchmarks.bench_serve import run
+
+        return run(out_dir=None, quick=True)
+    if suite == "versus":
+        # auto vs oblivious SUMMA: run() itself asserts auto wins >= 2 of 3
+        # instances (so the gate fails hard, not just on drift); the check
+        # below additionally pins each instance's win bit and comm_ratio
+        from benchmarks.bench_versus import run
 
         return run(out_dir=None, quick=True)
     raise ValueError(f"unknown suite {suite!r}; choose from {SUITES}")
@@ -177,6 +185,22 @@ def check(suite: str, tolerance: float, min_us: int, cur_cal: int) -> list[str]:
                 failures.append(
                     f"{rec['name']}: connectivity {rec['connectivity']} > "
                     f"baseline {ref['connectivity']} * {1 + tolerance}"
+                )
+        # versus head-to-head ride-alongs (machine-independent, so no
+        # calibration factor): an instance where auto used to beat the
+        # oblivious SUMMA baseline and no longer does is a regression even
+        # at identical wall time, and comm_ratio (auto words / SUMMA words,
+        # lower is better) is ceiling-gated like connectivity
+        if "auto_wins" in ref and rec.get("auto_wins", 0) < ref["auto_wins"]:
+            failures.append(
+                f"{rec['name']}: auto_wins {rec.get('auto_wins', 0)} < "
+                f"baseline {ref['auto_wins']} (auto lost to SUMMA)"
+            )
+        if ref.get("comm_ratio"):
+            if rec.get("comm_ratio", 0) > ref["comm_ratio"] * (1 + tolerance):
+                failures.append(
+                    f"{rec['name']}: comm_ratio {rec.get('comm_ratio', 0)} > "
+                    f"baseline {ref['comm_ratio']} * {1 + tolerance}"
                 )
         # throughput ride-alongs (device-engine pin rate, serving QPS): the
         # same machine factor that relaxes the timing gate lowers the floor

@@ -13,7 +13,7 @@ import sys
 
 from benchmarks import bench_amg, bench_bounds, bench_exec, bench_kernels, bench_lp
 from benchmarks import bench_mcl, bench_partition, bench_plan_build, bench_select
-from benchmarks import bench_serve, bench_tab2, roofline
+from benchmarks import bench_serve, bench_tab2, bench_versus, roofline
 from benchmarks.common import csv_lines
 
 SUITES = {
@@ -26,6 +26,7 @@ SUITES = {
     "plan": bench_plan_build.run,
     "partition": bench_partition.run,
     "select": bench_select.run,
+    "versus": bench_versus.run,
     "exec": bench_exec.run,
     "serve": bench_serve.run,
     "roofline": roofline.run,

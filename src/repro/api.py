@@ -42,13 +42,19 @@ from repro.core.comm import (
     memory_independent_bound,
 )
 from repro.core.hypergraph import Hypergraph
-from repro.core.spgemm_models import MODELS, SpGEMMInstance
+from repro.core.spgemm_models import SpGEMMInstance
 from repro.distributed.plan_ir import (
     ExecutionPlan,
     build_volume_plan,
     measured_route_words,
+    route_messages,
 )
-from repro.distributed.registry import ModelSpec, executable_models, get_spec
+from repro.distributed.registry import (
+    MODEL_SPECS,
+    ModelSpec,
+    executable_models,
+    get_spec,
+)
 __all__ = [
     "CompiledSpGEMM",
     "PlannedSpGEMM",
@@ -183,8 +189,10 @@ class PlannedSpGEMM:
 
     instance: SpGEMMInstance
     model: str
-    hypergraph: Hypergraph
-    partition: PartitionResult
+    # None for partition-free baselines (summa2d): no hypergraph was built
+    # and no partition ran — the execution plan is the whole story
+    hypergraph: Hypergraph | None
+    partition: PartitionResult | None
     execution_plan: ExecutionPlan | None
     eps: float = 0.10
     seed: int = 0
@@ -196,7 +204,9 @@ class PlannedSpGEMM:
 
     @property
     def p(self) -> int:
-        return self.partition.p
+        if self.partition is not None:
+            return self.partition.p
+        return self.execution_plan.p
 
     @property
     def executable(self) -> bool:
@@ -204,6 +214,11 @@ class PlannedSpGEMM:
 
     def costs(self) -> CommCosts:
         """The partition's communication metrics (Lemma 4.2 machinery)."""
+        if self.hypergraph is None:
+            raise ValueError(
+                f"model {self.model!r} is partition-free (no hypergraph); "
+                f"its communication is the analytic cost_report()"
+            )
         return evaluate(self.hypergraph, self.partition.parts, self.p)
 
     def cost_report(self) -> dict:
@@ -216,24 +231,24 @@ class PlannedSpGEMM:
           path), item-weighted per the model's convention;
         - ``padded_words``: what the padded all_to_all slots move on the
           wire;
+        - ``planned_messages``: non-empty (src, dst) route cells + fold
+          messages — the alpha term next to the words' beta term;
         - ``bounds``: the classical eq. (1) lower bounds the paper compares
           against (local memory taken as 3 * nnz / p, the bench convention).
+
+        For a partition-free baseline (summa2d) ``predicted_words`` is the
+        closed-form analytic volume (``stats["words_analytic"]``) and
+        ``planned_words`` the route-table count — their equality is the
+        same measured == predicted check, with connectivity replaced by
+        the closed form.
         """
         inst, p = self.instance, self.p
-        costs = self.costs()
         n_nz = inst.a.nnz + inst.b.nnz + inst.c.nnz
         local_mem = max(3 * n_nz / p, 64)
         report = {
             "model": self.model,
             "p": p,
             "executable": self.executable,
-            "n_vertices": self.hypergraph.n_vertices,
-            "n_pins": self.hypergraph.n_pins,
-            "predicted_words": int(costs.connectivity),
-            "predicted_max_part": int(costs.max_part_cost),
-            "expand_words": int(costs.expand),
-            "fold_words": int(costs.fold),
-            "comp_imbalance": round(costs.comp_imbalance, 4),
             "bounds": {
                 "memory_dependent": round(
                     memory_dependent_bound(inst.n_mult, p, local_mem), 1
@@ -243,10 +258,30 @@ class PlannedSpGEMM:
                 ),
             },
         }
+        if self.hypergraph is None:
+            plan_obj = self.execution_plan
+            report["predicted_words"] = int(plan_obj.stats["words_analytic"])
+            report["planned_words"] = measured_route_words(plan_obj)
+            report["padded_words"] = plan_obj.comm_words_padded
+            report["planned_messages"] = route_messages(plan_obj)
+            return report
+        costs = self.costs()
+        report.update(
+            {
+                "n_vertices": self.hypergraph.n_vertices,
+                "n_pins": self.hypergraph.n_pins,
+                "predicted_words": int(costs.connectivity),
+                "predicted_max_part": int(costs.max_part_cost),
+                "expand_words": int(costs.expand),
+                "fold_words": int(costs.fold),
+                "comp_imbalance": round(costs.comp_imbalance, 4),
+            }
+        )
         plan_obj = self.execution_plan
         if plan_obj is None:
-            # volume-only models still get an IR whose words == prediction
-            # (net costs ride on the routes' per-item word overrides)
+            # plans that didn't lower (include_nz partitions on models whose
+            # lowerers don't accept them) still get an IR whose words ==
+            # prediction (net costs ride on the routes' per-item overrides)
             plan_obj = build_volume_plan(self.hypergraph, self.partition.parts, p)
             report["planned_words"] = plan_obj.comm_words_ideal
         else:
@@ -255,6 +290,7 @@ class PlannedSpGEMM:
             if item_words is not None:
                 report["planned_items"] = measured_route_words(plan_obj)
         report["padded_words"] = plan_obj.comm_words_padded
+        report["planned_messages"] = route_messages(plan_obj)
         return report
 
     def compile(
@@ -293,7 +329,7 @@ class PlannedSpGEMM:
 
         spec = self.spec
         inst = self.instance
-        mesh = spec.default_mesh(self.p, devices)
+        mesh = spec.default_mesh(self.p, devices, instance=inst)
         if backend is None:
             backend = spec.compile_defaults.get("backend")
         runtime_exe = compile_spgemm(
@@ -341,6 +377,18 @@ def _plan_one(
     coarsen: str = "auto",
 ) -> PlannedSpGEMM:
     spec = get_spec(model)
+    if spec.build is None:
+        # partition-free baseline (summa2d): no hypergraph to build or
+        # partition — lower the instance straight to its execution plan
+        return PlannedSpGEMM(
+            instance=inst,
+            model=model,
+            hypergraph=None,
+            partition=None,
+            execution_plan=spec.lower(inst, None, p),
+            eps=eps,
+            seed=seed,
+        )
     hg = spec.build(inst, include_nz=include_nz)
     res = _partition(
         hg,
@@ -384,11 +432,12 @@ def plan(
     matrix, or ``SparseStructure`` — values never enter the inspector);
     alternatively ``A`` may be an existing ``SpGEMMInstance`` (``B`` omitted)
     so repeated per-model planning reuses one symbolic inspection.
-    ``model`` is one of the paper's seven (``repro.MODELS``) or ``"auto"``:
-    partition every *executable* model and keep the communication-minimal
+    ``model`` is one of the paper's seven (``repro.MODELS``, all
+    executable), ``"summa2d"`` (the sparsity-oblivious Sparse SUMMA
+    baseline — partition-free, never auto-selected), or ``"auto"``:
+    partition every auto-eligible model and keep the communication-minimal
     one (the same min-predicted-words rule ``sweep_instance`` reports); the
-    per-model records land on ``.selection``.  Volume-only models
-    (columnwise, monoA, monoB) plan and predict but cannot ``compile()``.
+    per-model records land on ``.selection``.
     ``include_nz`` keeps the V^nz nonzero vertices (Sec. 4 reading); the
     partitioner then places them too, and the handle stays cost/analysis-
     only unless the model's lowerer understands such partitions (fine does).
@@ -409,8 +458,11 @@ def plan(
             raise ValueError("B is required unless A is an SpGEMMInstance")
         inst = SpGEMMInstance.from_operands(A, B, name=name)
     if model != "auto":
-        if model not in MODELS:
-            raise ValueError(f"unknown model {model!r}; choose from {MODELS} or 'auto'")
+        if model not in MODEL_SPECS:
+            raise ValueError(
+                f"unknown model {model!r}; choose from "
+                f"{tuple(MODEL_SPECS)} or 'auto'"
+            )
         return _plan_one(
             inst, model, p, eps, seed, include_nz, engine, coarsen=coarsen
         )

@@ -229,7 +229,7 @@ _ROUTE_SCALARS = (
 
 
 def _plan_classes():
-    from repro.distributed import plan_ir
+    from repro.distributed import plan_ir, summa
 
     return {
         cls.__name__: cls
@@ -239,6 +239,7 @@ def _plan_classes():
             plan_ir.OuterPlan,
             plan_ir.MonoCPlan,
             plan_ir.FinePlan,
+            summa.SummaPlan,
         )
     }
 

@@ -27,6 +27,7 @@ __all__ = [
     "OuterPlan",
     "MonoCPlan",
     "FinePlan",
+    "SummaPlan",
     "ModelSpec",
     "MODEL_SPECS",
     "executable_models",
@@ -40,6 +41,8 @@ __all__ = [
     "measured_route_words",
     "plan_fine_from_dense",
     "plan_monoC_from_dense",
+    "build_summa_plan",
+    "summa_words_ideal",
     "rowwise_spgemm",
     "outer_product_spgemm",
     "monoC_spgemm",
@@ -72,6 +75,11 @@ _HOME = {
         "get_spec",
     ),
     "repro.distributed.runtime": ("CompiledSpGEMM", "compile_spgemm"),
+    "repro.distributed.summa": (
+        "SummaPlan",
+        "build_summa_plan",
+        "summa_words_ideal",
+    ),
     "repro.distributed.session": ("SpGEMMSession",),
     "repro.distributed.spgemm_exec": (
         "fine_spgemm",

@@ -139,6 +139,19 @@ def measured_route_words(
     return int(words + plan.stats.get("fold_words_ideal", 0))
 
 
+def route_messages(plan: "ExecutionPlan") -> int:
+    """Point-to-point messages the plan schedules: the number of non-empty
+    ``(src, dst)`` cells across all routing tables (one padded all_to_all
+    lane per pair, however many items it carries), plus fold-phase messages
+    tracked only in ``stats`` (the outer plan's psum_scatter has no table —
+    ``build_outer_plan`` records ``p * (p - 1)`` there).  The alpha term of
+    the alpha-beta cost model, next to ``measured_route_words``'s beta."""
+    msgs = 0
+    for r in plan.routes.values():
+        msgs += int((r.recv_key >= 0).any(axis=2).sum())
+    return int(msgs + plan.stats.get("fold_messages", 0))
+
+
 # ---------------------------------------------------------------------------
 # Vectorized construction primitives
 # ---------------------------------------------------------------------------
@@ -376,7 +389,13 @@ def build_outer_plan(
         p=p,
         ownership={"k": k_part, "c_row": c_part},
         local_ids={"k": local_ks},
-        stats={"fold_words_ideal": ideal, "fold_words_padded": padded},
+        stats={
+            "fold_words_ideal": ideal,
+            "fold_words_padded": padded,
+            # the psum_scatter is all-pairs: every device sends one C-row
+            # chunk to each of the other p - 1
+            "fold_messages": p * (p - 1) if p > 1 else 0,
+        },
     )
 
 

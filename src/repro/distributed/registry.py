@@ -18,9 +18,15 @@ packing branches, and the ``EXECUTABLE`` tuple).  A ``ModelSpec`` bundles:
 - ``item_words`` / ``measured``: how the plan's routed words relate to the
   model's predicted words (exact, useful-exact, or volume-only).
 
-Models without an executor (columnwise, monoA, monoB) are explicitly
-volume-only: they still predict (``build_volume_plan`` gives their cut an
-IR), but ``lower``/``make_runner`` are ``None``.
+All seven paper models are fully executable (lowerer + runner + unpacker);
+columnwise rides the rowwise machinery under ``C^T = B^T A^T``, and
+monoA/monoB lower through the fine plan with multiplications colocated
+with their stationary operand.  The registry also carries one entry that
+is *not* a hypergraph model: ``"summa2d"``, the sparsity-oblivious Sparse
+SUMMA baseline (``build is None`` — no hypergraph, no partition; the
+lowerer goes straight from the instance).  It is excluded from
+``model="auto"`` via ``in_auto=False`` so selection stays a contest among
+the paper's models, with SUMMA always available as the competitor.
 
 Everything jax-flavored is imported inside the runner factories so that
 importing the registry (and therefore ``select``/``api``) stays light.
@@ -41,6 +47,7 @@ from repro.distributed.plan_ir import (
     build_rowwise_plan,
     derive_owner_from_pins,
 )
+from repro.distributed.summa import _lower_summa, _summa_runner, summa_mesh_shape
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +129,42 @@ def _lower_monoC(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPl
 
 def _lower_fine(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPlan:
     return build_fine_plan(inst, parts, p)
+
+
+def _transposed_instance(inst: SpGEMMInstance) -> SpGEMMInstance:
+    """The ``C^T = B^T A^T`` instance: columnwise of ``inst`` IS rowwise of
+    this (identical hypergraph — vertex ``v_j`` keeps its index, net
+    ``n^A_k`` keeps its pins and its ``nnz(A col k)`` cost)."""
+    return SpGEMMInstance(
+        inst.b.transpose(), inst.a.transpose(), name=f"{inst.name}^T"
+    )
+
+
+def _lower_columnwise(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPlan:
+    plan = _lower_rowwise(_transposed_instance(inst), parts, p)
+    plan.model = "columnwise"
+    return plan
+
+
+def _lower_monoA(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPlan:
+    # monoA vertices are A nonzeros; colocating every multiplication with
+    # its A nonzero makes expand_a empty, expand_b ship each b_kj to the
+    # parts of A-column k (= the pins of B-net n^B_k, so items weighted by
+    # the net's nnz(B row k) cost sum to exactly the B-net connectivity)
+    # and reduce_c ship lambda - 1 partials per C net — measured == predicted
+    parts = np.asarray(parts, dtype=np.int64)
+    plan = build_fine_plan(inst, parts[inst.mult_a_pos], p, a_part=parts)
+    plan.model = "monoA"
+    return plan
+
+
+def _lower_monoB(inst: SpGEMMInstance, parts: np.ndarray, p: int) -> ExecutionPlan:
+    # symmetric to monoA with B stationary (vertices are B nonzeros in CSR
+    # order, matching the monoB builder's pin convention)
+    parts = np.asarray(parts, dtype=np.int64)
+    plan = build_fine_plan(inst, parts[inst.mult_b_pos], p, b_part=parts)
+    plan.model = "monoB"
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -209,6 +252,33 @@ def _fine_runner(plan, a_structure, b_structure, mesh, *, dtype, block, backend,
     return RunnerSetup(run, (nA,), (nB,), (I, J))
 
 
+def _columnwise_runner(plan, a_structure, b_structure, mesh, *, dtype, block, backend, axis, axes):
+    # run rowwise on the transposed operands: the plan was lowered from the
+    # C^T = B^T A^T instance, so the inner runner sees A' = B^T, B' = A^T
+    # and produces C^T shards; values arrive in the *original* CSR orders
+    # and are permuted into the transposed (col-major) orders on device
+    import jax.numpy as jnp
+
+    a_t = b_structure.transpose()
+    b_t = a_structure.transpose()
+    inner = _rowwise_runner(
+        plan, a_t, b_t, mesh,
+        dtype=dtype, block=block, backend=backend, axis=axis, axes=axes,
+    )
+    ar, ac = a_structure.coo()
+    br, bc = b_structure.coo()
+    # CSR order of X^T enumerates X's nonzeros sorted by (col, row)
+    perm_a = jnp.asarray(np.lexsort((ar, ac)))
+    perm_b = jnp.asarray(np.lexsort((br, bc)))
+
+    def run(a_values, b_values):
+        return inner.run(b_values[perm_b], a_values[perm_a])
+
+    I, _ = a_structure.shape
+    _, J = b_structure.shape
+    return RunnerSetup(run, (a_structure.nnz,), (b_structure.nnz,), (I, J))
+
+
 def _monoC_runner(plan, a_structure, b_structure, mesh, *, dtype, block, backend, axis, axes):
     # a_structure / b_structure are the BLOCK structures here; values are
     # (nnz, block, block) arrays in block CSR (= to_bsr) order
@@ -249,6 +319,13 @@ def _unpack_rowwise(c_local, plan, c_structure, shape):
     return unpack_rowwise_result(c_local, plan, shape[0])
 
 
+def _unpack_columnwise(c_local, plan, c_structure, shape):
+    from repro.distributed.spgemm_exec import unpack_rowwise_result
+
+    # the inner rowwise step computed C^T over J rows; transpose back
+    return unpack_rowwise_result(c_local, plan, shape[1]).T
+
+
 def _unpack_outer(c_local, plan, c_structure, shape):
     return np.asarray(c_local).reshape(-1, shape[1])[: shape[0]]
 
@@ -279,11 +356,11 @@ def _values_blocked(vals: np.ndarray, block: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # mesh geometry
 # ---------------------------------------------------------------------------
-def _mesh_1d(p: int) -> tuple[int, ...]:
+def _mesh_1d(p: int, inst: SpGEMMInstance | None = None) -> tuple[int, ...]:
     return (p,)
 
 
-def _mesh_monoC(p: int) -> tuple[int, ...]:
+def _mesh_monoC(p: int, inst: SpGEMMInstance | None = None) -> tuple[int, ...]:
     # the executor flattens the 2D mesh for its all_to_alls, so any
     # factorization of p works; (1, p) covers odd p (and p=1) — the former
     # caller-side "odd p skipped" quirk is gone
@@ -298,18 +375,24 @@ class ModelSpec:
     """Everything one paper model needs, declared in one place.
 
     ``measured`` states how the plan's route-counted words relate to the
-    hypergraph prediction: "exact" (replicated-free plans — words on the
-    wire == connectivity), "useful" (unit-cost prediction recovered by
-    nnz-weighting / fold accounting), or None (volume-only model)."""
+    model's prediction: "exact" (replicated-free plans — words on the
+    wire == the predicted words), "useful" (unit-cost prediction recovered
+    by nnz-weighting / fold accounting), or None (no executor).
+
+    ``build is None`` marks a partition-free baseline (summa2d): there is
+    no hypergraph — the lowerer goes straight from the instance and the
+    prediction is the plan's analytic ``stats["words_analytic"]``.
+    ``in_auto`` gates membership in ``model="auto"`` selection; the SUMMA
+    baseline is executable but never auto-selected."""
 
     name: str
     family: str  # "1D" | "2D" | "3D" (paper Sec. 5 classification)
-    build: Callable  # (inst, include_nz=False) -> Hypergraph
+    build: Callable | None  # (inst, include_nz=False) -> Hypergraph; None: no hypergraph
     lower: Callable | None = None  # (inst, parts, p) -> ExecutionPlan
     make_runner: Callable | None = None  # see RunnerSetup
     make_batched_runner: Callable | None = None  # (..., batch=n) -> RunnerSetup
     unpack: Callable | None = None  # (c_local, plan, c_structure, shape) -> dense
-    mesh_shape: Callable = _mesh_1d  # p -> process-grid shape
+    mesh_shape: Callable = _mesh_1d  # (p, inst=None) -> process-grid shape
     axis_names: tuple[str, ...] = ("x",)
     pack_values: Callable = _values_flat  # (vals, block) -> executor layout
     item_words: Callable = lambda inst: None  # (inst) -> {route: words-per-item}
@@ -317,6 +400,7 @@ class ModelSpec:
     lower_include_nz: bool = False  # lowerer accepts include_nz partitions
     compile_defaults: dict = dataclasses.field(default_factory=dict)
     measured: str | None = None  # "exact" | "useful" | None
+    in_auto: bool = True  # participates in model="auto" selection
     notes: str = ""
 
     @property
@@ -339,10 +423,11 @@ class ModelSpec:
         factory = self.make_batched_runner or vmap_batched_runner(self.make_runner)
         return factory(plan, a_structure, b_structure, mesh, batch=batch, **kwargs)
 
-    def default_mesh(self, p: int, devices=None):
+    def default_mesh(self, p: int, devices=None, instance=None):
         """Build the model's process grid over ``devices`` (default: the
         first p of ``jax.devices()``) — mesh geometry is a property of the
-        algorithm, not of call sites."""
+        algorithm, not of call sites.  ``instance`` lets shape hooks pick a
+        non-square aspect from the operands (summa2d's ``(pr, pc)``)."""
         import jax
         from jax.sharding import Mesh
 
@@ -351,7 +436,8 @@ class ModelSpec:
             raise ValueError(
                 f"{self.name} needs p={p} devices but only {len(devs)} available"
             )
-        return Mesh(np.array(devs[:p]).reshape(self.mesh_shape(p)), self.axis_names)
+        shape = self.mesh_shape(p, instance)
+        return Mesh(np.array(devs[:p]).reshape(shape), self.axis_names)
 
 
 def _build(model: str) -> Callable:
@@ -390,7 +476,12 @@ MODEL_SPECS: dict[str, ModelSpec] = {
         name="columnwise",
         family="1D",
         build=_build("columnwise"),
-        notes="volume-only (symmetric to rowwise via C^T = B^T A^T)",
+        lower=_lower_columnwise,
+        make_runner=_columnwise_runner,
+        unpack=_unpack_columnwise,
+        item_words=lambda inst: {"expand": inst.a.col_counts()},
+        measured="useful",
+        notes="rowwise under C^T = B^T A^T; ships whole A columns",
     ),
     "outer": ModelSpec(
         name="outer",
@@ -406,13 +497,23 @@ MODEL_SPECS: dict[str, ModelSpec] = {
         name="monoA",
         family="2D",
         build=_build("monoA"),
-        notes="volume-only",
+        lower=_lower_monoA,
+        make_runner=_fine_runner,
+        unpack=_unpack_fine,
+        needs_c_structure=True,
+        measured="exact",
+        notes="A nonzero stationary; mults colocated with A, fine executor",
     ),
     "monoB": ModelSpec(
         name="monoB",
         family="2D",
         build=_build("monoB"),
-        notes="volume-only",
+        lower=_lower_monoB,
+        make_runner=_fine_runner,
+        unpack=_unpack_fine,
+        needs_c_structure=True,
+        measured="exact",
+        notes="B nonzero stationary; mults colocated with B, fine executor",
     ),
     "monoC": ModelSpec(
         name="monoC",
@@ -432,12 +533,32 @@ MODEL_SPECS: dict[str, ModelSpec] = {
         measured="exact",
         notes="C nonzero lives on one device; 2D mesh, BSR local compute",
     ),
+    # -- not a hypergraph model: the oblivious competitor ------------------
+    "summa2d": ModelSpec(
+        name="summa2d",
+        family="2D",
+        build=None,
+        lower=_lower_summa,
+        make_runner=_summa_runner,
+        unpack=_unpack_monoC,  # same device-major owned-C slot layout
+        mesh_shape=summa_mesh_shape,
+        axis_names=("x", "y"),
+        pack_values=_values_blocked,
+        needs_c_structure=True,
+        # same rationale as monoC: scalar blocks through the BSR kernel pay
+        # interpret-mode overhead on CPU; dense XLA fallback by default
+        compile_defaults={"backend": "xla"},
+        measured="exact",
+        in_auto=False,
+        notes="Sparse SUMMA (Buluc-Gilbert): sparsity-oblivious 2D baseline",
+    ),
 }
 
-#: models whose partitions never lower to an executor (they still predict)
-VOLUME_ONLY = tuple(n for n, s in MODEL_SPECS.items() if not s.executable)
+#: models whose partitions never lower to an executor (they still predict);
+#: empty since every paper model gained its executor, kept as API surface
+VOLUME_ONLY = tuple(n for n in MODELS if not MODEL_SPECS[n].executable)
 
-assert set(MODEL_SPECS) == set(MODELS), "registry out of sync with core MODELS"
+assert set(MODELS) <= set(MODEL_SPECS), "registry out of sync with core MODELS"
 
 
 def get_spec(model: str) -> ModelSpec:
@@ -450,6 +571,9 @@ def get_spec(model: str) -> ModelSpec:
 
 
 def executable_models() -> tuple[str, ...]:
-    """Names of the models with a full plan-lowering + executor path, in
-    ``MODELS`` order."""
-    return tuple(n for n in MODELS if MODEL_SPECS[n].executable)
+    """Names of the paper models with a full plan-lowering + executor path
+    that participate in ``model="auto"``, in ``MODELS`` order (the summa2d
+    baseline is executable but excluded via ``in_auto=False``)."""
+    return tuple(
+        n for n in MODELS if MODEL_SPECS[n].executable and MODEL_SPECS[n].in_auto
+    )

@@ -15,12 +15,13 @@ module closes the loop the models only predict:
    dense oracle, so "the words the cut prescribes" and "the words the
    program moves" are pinned to each other end to end.
 
-For replicated-free plans — fine-grained and monochrome-C, where every
+For replicated-free plans — fine-grained, monochrome-A/B/C, where every
 shipped item is a single nonzero payload — measured == predicted exactly.
-Row-wise ships whole dense B rows, so its measured *useful* words match the
-unit-cost prediction while its wire words exceed the nnz-weighted cost; the
-sweep reports both so the gap is visible, as is the padded all_to_all
-overhead for every route.
+Row-wise (and columnwise, its ``C^T = B^T A^T`` mirror) ships whole dense
+rows, so its measured *useful* words match the unit-cost prediction while
+its wire words exceed the nnz-weighted cost; the sweep reports both so the
+gap is visible, as are the padded all_to_all overhead and the message
+count (``planned_messages``) for every model.
 
 Everything model-specific (which models lower, how routed words are
 weighted, what mesh/backend an executor wants) comes from the declarative
@@ -169,6 +170,12 @@ def sweep_instance(
             "volume_plan_words": vol_plan.comm_words_ideal,
             "comp_imbalance": report["comp_imbalance"],
             "executable": spec.executable,
+            # always surfaced (volume-plan fallback included) so benchmark
+            # consumers get wire volume and message counts without
+            # re-lowering: the alpha (messages) and padded-beta terms next
+            # to the ideal words
+            "padded_words": report["padded_words"],
+            "planned_messages": report["planned_messages"],
         }
         assert rec["volume_plan_words"] == rec["predicted_words"], (
             f"{model}: volume plan diverged from connectivity metric"
@@ -180,7 +187,6 @@ def sweep_instance(
                 # the unit count is the number of item transfers (e.g. row
                 # shipments); the weighted count above is the useful words
                 rec["measured_items"] = report["planned_items"]
-            rec["padded_words"] = report["padded_words"]
             if execute and a_dense is not None:
                 if can_exec:
                     rec.update(_execute(handle, a_dense, b_dense, want))

@@ -284,7 +284,7 @@ def case_select():
 
 
 def case_runtime():
-    """Compile-once runtime: all four executors AOT-compiled once, value-only
+    """Compile-once runtime: every registry executor AOT-compiled once, value-only
     updates match the dense oracle, zero retraces across >= 10 same-structure
     calls, donation never corrupts caller-held numpy buffers, and the LRU
     returns the identical executable on a same-key lookup."""
@@ -309,7 +309,7 @@ def case_runtime():
         return av, bv
 
     fine_exe = None
-    for model in ("rowwise", "outer", "monoC", "fine"):
+    for model in ("rowwise", "columnwise", "outer", "monoA", "monoB", "monoC", "fine"):
         hg = build_model(inst, model)
         res = partition(hg, p, eps=0.2, seed=0)
         plan = build_executable_plan(inst, model, res.parts, p)
@@ -396,6 +396,54 @@ def case_api():
     )
     np.testing.assert_allclose(auto(a_vals, b_vals), want, rtol=1e-4, atol=1e-4)
     print("OK api p=%d auto=%s" % (p, auto.model))
+
+
+def case_summa():
+    """Sparse SUMMA baseline at p=N_DEV: the oblivious executor matches the
+    dense oracle through the front door, its route tables ship exactly the
+    closed-form nnz(A)(pc-1) + nnz(B)(pr-1) words, and the SAME plan executes
+    correctly when the caller forces non-square (pr, pc) factorizations —
+    the flattened all_to_all is independent of the physical mesh shape."""
+    import repro
+    from repro.distributed.plan_ir import measured_route_words
+    from repro.distributed.summa import build_summa_plan, summa_words_ideal
+
+    p = N_DEV
+    rng = np.random.default_rng(13)
+    a_s = random_structure(33, 26, 0.18, rng)
+    b_s = random_structure(26, 29, 0.2, rng)
+    a = _random_valued(a_s, rng)
+    b = _random_valued(b_s, rng)
+    want = a @ b
+    handle = repro.plan(a_s, b_s, p=p, model="summa2d")
+    plan = handle.execution_plan
+    assert measured_route_words(plan) == plan.stats["words_analytic"]
+    assert plan.stats["words_analytic"] == summa_words_ideal(
+        handle.instance, plan.pr, plan.pc
+    )
+    got = handle(a[a_s.coo()], b[b_s.coo()])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    # every factorization of p, including the degenerate 1D ones
+    inst = handle.instance
+    for pr in range(1, p + 1):
+        if p % pr:
+            continue
+        pc = p // pr
+        forced = build_summa_plan(inst, p, pr=pr, pc=pc)
+        assert forced.stats["words_analytic"] == summa_words_ideal(inst, pr, pc)
+        h2 = repro.PlannedSpGEMM(
+            instance=inst, model="summa2d", hypergraph=None, partition=None,
+            execution_plan=forced,
+        )
+        got2 = h2(a[a_s.coo()], b[b_s.coo()])
+        np.testing.assert_allclose(
+            got2, want, rtol=1e-4, atol=1e-4, err_msg=f"pr={pr} pc={pc}"
+        )
+    print(
+        "OK summa p=%d mesh=(%d,%d) words=%d"
+        % (p, plan.pr, plan.pc, plan.stats["words_analytic"])
+    )
 
 
 def case_api_odd_p():

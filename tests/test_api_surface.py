@@ -94,8 +94,13 @@ def test_planned_handle_surface_is_pinned():
 
 
 def test_registry_is_the_executable_source_of_truth():
-    assert tuple(repro.MODEL_SPECS) == repro.MODELS
-    assert repro.executable_models() == ("fine", "rowwise", "outer", "monoC")
+    # the seven paper models plus the oblivious SUMMA baseline (by name only;
+    # never part of model="auto")
+    assert tuple(repro.MODEL_SPECS) == (*repro.MODELS, "summa2d")
+    assert repro.executable_models() == repro.MODELS
+    assert repro.executable_models() == (
+        "fine", "rowwise", "columnwise", "outer", "monoA", "monoB", "monoC"
+    )
 
 
 def test_planning_side_imports_do_not_import_jax():

@@ -50,41 +50,42 @@ def _run(case: str, devices: int = 4) -> str:
 # ---------------------------------------------------------------------------
 # completeness / consistency
 # ---------------------------------------------------------------------------
-def test_registry_covers_every_model_exactly():
-    assert set(MODEL_SPECS) == set(MODELS)
-    assert len(MODEL_SPECS) == len(MODELS)
+def test_registry_covers_every_model_and_the_summa_baseline():
+    assert set(MODELS) <= set(MODEL_SPECS)
+    assert set(MODEL_SPECS) - set(MODELS) == {"summa2d"}
+    # the oblivious baseline is executable but never enters model="auto"
+    summa = MODEL_SPECS["summa2d"]
+    assert summa.executable and not summa.in_auto and summa.build is None
+    assert all(MODEL_SPECS[m].in_auto for m in MODELS)
 
 
 @pytest.mark.parametrize("model", MODELS)
-def test_every_model_fully_executable_or_explicitly_volume_only(model):
-    """No half-wired entries: lowerer, runner, unpacker and mesh geometry
-    come as a package, or not at all."""
+def test_every_model_fully_executable(model):
+    """No half-wired and no volume-only entries remain: every paper model
+    carries lowerer, runner, unpacker and mesh geometry as a package."""
     spec = get_spec(model)
     assert spec.name == model
     assert spec.family in ("1D", "2D", "3D")
     assert callable(spec.build)
+    assert spec.executable, f"{model}: silently volume-only"
     parts = (spec.lower, spec.make_runner, spec.unpack)
-    if spec.executable:
-        assert all(callable(f) for f in parts), f"{model}: partial spec"
-        assert callable(spec.mesh_shape) and spec.axis_names
-        assert spec.measured in ("exact", "useful")
-        assert model not in VOLUME_ONLY
-    else:
-        assert model in VOLUME_ONLY, f"{model}: not marked volume-only"
-        assert all(f is None for f in parts), f"{model}: stray executor piece"
-        assert spec.measured is None
+    assert all(callable(f) for f in parts), f"{model}: partial spec"
+    assert callable(spec.mesh_shape) and spec.axis_names
+    assert spec.measured in ("exact", "useful")
+    assert model not in VOLUME_ONLY
+    assert VOLUME_ONLY == ()
 
 
 def test_executable_models_matches_select_surface():
     from repro.distributed.select import EXECUTABLE
 
     assert executable_models() == EXECUTABLE
-    assert set(executable_models()) == {"rowwise", "outer", "monoC", "fine"}
+    assert executable_models() == MODELS  # all seven, in MODELS order
 
 
 def test_mesh_shapes_multiply_to_p():
     for p in (1, 2, 3, 4, 8):
-        for model in MODELS:
+        for model in (*MODELS, "summa2d"):
             spec = get_spec(model)
             if not spec.executable:
                 continue
@@ -230,12 +231,22 @@ def test_planned_handle_has_identity_semantics():
     assert len({h1, h2}) == 2  # hashable
 
 
-def test_volume_only_compile_raises_with_guidance():
+def test_summa_baseline_is_planned_but_never_auto_selected():
+    """The oblivious competitor is always available by name, carries an
+    analytic (hypergraph-free) cost report whose planned == predicted, and
+    never appears in the model="auto" contest."""
     import repro
 
     rng = np.random.default_rng(7)
     a_s = random_structure(14, 12, 0.25, rng)
     b_s = random_structure(12, 13, 0.25, rng)
-    handle = repro.plan(a_s, b_s, p=2, model="monoB")
-    with pytest.raises(ValueError, match="volume-only"):
-        handle.compile()
+    handle = repro.plan(a_s, b_s, p=2, model="summa2d")
+    assert handle.hypergraph is None and handle.partition is None
+    assert handle.p == 2  # falls back to the execution plan's p
+    report = handle.cost_report()
+    assert report["planned_words"] == report["predicted_words"]
+    assert report["planned_messages"] >= 0 and "padded_words" in report
+    with pytest.raises(ValueError, match="partition-free"):
+        handle.costs()
+    auto = repro.plan(a_s, b_s, p=2, model="auto")
+    assert "summa2d" not in {r["model"] for r in auto.selection}

@@ -1,0 +1,185 @@
+"""Sparse SUMMA baseline: the oblivious competitor's plan-level invariants
+(pure numpy, in-process) plus the executor oracle through the subprocess
+runner (forced host devices must not leak into this pytest process' jax).
+
+The load-bearing identity mirrors the hypergraph models' measured ==
+predicted check with the connectivity metric replaced by the closed form:
+the per-stage broadcast routes must ship exactly
+``nnz(A) * (pc - 1) + nnz(B) * (pr - 1)`` words for EVERY factorization of
+p — obliviousness means the volume never depends on the other operand's
+sparsity.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.spgemm_models import SpGEMMInstance
+from repro.distributed.plan_ir import measured_route_words, route_messages
+from repro.distributed.summa import (
+    SummaPlan,
+    build_summa_plan,
+    summa_mesh_shape,
+    summa_words_ideal,
+)
+from repro.sparse.structure import random_structure
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUNNER = os.path.join(ROOT, "tests", "multidev_runner.py")
+
+
+def _run(case: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_DEVICES"] = str(devices)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, RUNNER, case],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def _inst(seed: int, shape=(30, 24, 27), density=(0.2, 0.2)) -> SpGEMMInstance:
+    rng = np.random.default_rng(seed)
+    I, K, J = shape
+    return SpGEMMInstance(
+        random_structure(I, K, density[0], rng),
+        random_structure(K, J, density[1], rng),
+        name=f"summa_case_{seed}",
+    )
+
+
+def _factorizations(p: int):
+    return [(pr, p // pr) for pr in range(1, p + 1) if p % pr == 0]
+
+
+# ---------------------------------------------------------------------------
+# plan-level invariants (pure numpy)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", [2, 4, 6, 8, 12])
+def test_measured_words_equal_closed_form_for_every_factorization(p):
+    inst = _inst(0)
+    for pr, pc in _factorizations(p):
+        plan = build_summa_plan(inst, p, pr=pr, pc=pc)
+        assert isinstance(plan, SummaPlan)
+        want = summa_words_ideal(inst, pr, pc)
+        assert plan.stats["words_analytic"] == want, (pr, pc)
+        assert measured_route_words(plan) == want, (pr, pc)
+        assert plan.comm_words_ideal == want, (pr, pc)
+        assert plan.comm_words_padded >= want, (pr, pc)
+        assert plan.stats["n_pairs"] == inst.n_mult, (pr, pc)
+        assert route_messages(plan) >= 0
+
+
+def test_stage_count_is_lcm_and_routes_cover_every_stage():
+    inst = _inst(1)
+    for p, pr, pc, want_s in ((6, 2, 3, 6), (8, 2, 4, 4), (4, 2, 2, 2), (1, 1, 1, 1)):
+        plan = build_summa_plan(inst, p, pr=pr, pc=pc)
+        assert (plan.pr, plan.pc, plan.n_stages) == (pr, pc, want_s)
+        assert len(plan.routes) == 2 * want_s
+        # every A/B nonzero is broadcast in exactly one stage
+        sent_a = sum(plan.routes[f"bcast_a_s{t}"].items_ideal for t in range(want_s))
+        sent_b = sum(plan.routes[f"bcast_b_s{t}"].items_ideal for t in range(want_s))
+        assert sent_a == inst.a.nnz * (pc - 1)
+        assert sent_b == inst.b.nnz * (pr - 1)
+
+
+def test_single_device_plan_is_communication_free():
+    plan = build_summa_plan(_inst(2), 1)
+    assert plan.stats["words_analytic"] == 0
+    assert measured_route_words(plan) == 0
+
+
+def test_bad_factorization_raises():
+    with pytest.raises(ValueError, match="does not factor"):
+        build_summa_plan(_inst(3), 4, pr=3, pc=2)
+
+
+def test_mesh_shape_minimizes_analytic_volume():
+    # no instance: nearest-square, ties toward more rows
+    assert summa_mesh_shape(4) == (2, 2)
+    assert summa_mesh_shape(8) == (4, 2)
+    assert summa_mesh_shape(16) == (4, 4)
+    # the aspect follows the operand imbalance: broadcasting A costs
+    # (pc - 1) copies, so an A-heavy instance wants few columns, and a
+    # B-heavy one few rows
+    rng = np.random.default_rng(4)
+    a_heavy = SpGEMMInstance(
+        random_structure(40, 30, 0.5, rng), random_structure(30, 8, 0.05, rng)
+    )
+    b_heavy = SpGEMMInstance(
+        random_structure(8, 30, 0.05, rng), random_structure(30, 40, 0.5, rng)
+    )
+    assert summa_mesh_shape(8, a_heavy) == (8, 1)
+    assert summa_mesh_shape(8, b_heavy) == (1, 8)
+    # and in general it is the argmin of the closed form over factorizations
+    for inst in (a_heavy, b_heavy, _inst(5)):
+        for p in (4, 6, 8):
+            pr, pc = summa_mesh_shape(p, inst)
+            assert pr * pc == p
+            best = min(summa_words_ideal(inst, r, c) for r, c in _factorizations(p))
+            assert summa_words_ideal(inst, pr, pc) == best
+
+
+def test_plan_store_round_trip(tmp_path):
+    """The crash-safe plan store must rebuild a SummaPlan byte-for-byte —
+    sessions persist whatever model they planned, baseline included."""
+    from repro.checkpoint.store import restore_plan, save_plan
+
+    plan = build_summa_plan(_inst(6), 4)
+    save_plan(str(tmp_path), "summa_rt", plan, meta={"model": "summa2d"})
+    restored = restore_plan(str(tmp_path), "summa_rt").plan
+    assert type(restored) is SummaPlan
+    assert restored.stats == plan.stats
+    assert measured_route_words(restored) == measured_route_words(plan)
+    for name, route in plan.routes.items():
+        np.testing.assert_array_equal(restored.routes[name].send_idx, route.send_idx)
+        np.testing.assert_array_equal(restored.routes[name].recv_key, route.recv_key)
+    for name, tab in plan.compute.items():
+        np.testing.assert_array_equal(restored.compute[name], tab)
+
+
+# ---------------------------------------------------------------------------
+# executor oracle
+# ---------------------------------------------------------------------------
+def test_front_door_oracle_p1_and_zero_retrace():
+    """p=1 runs in-process (a 1-device mesh exercises the full packed
+    program): dense-oracle match plus zero retraces across 10 value-only
+    calls on the one AOT executable."""
+    import jax
+
+    import repro
+    from repro.distributed import runtime
+
+    inst = _inst(7, shape=(22, 18, 20), density=(0.25, 0.25))
+    rng = np.random.default_rng(7)
+    a = np.zeros(inst.a.shape, np.float32)
+    b = np.zeros(inst.b.shape, np.float32)
+    a[inst.a.coo()] = rng.standard_normal(inst.a.nnz).astype(np.float32)
+    b[inst.b.coo()] = rng.standard_normal(inst.b.nnz).astype(np.float32)
+    handle = repro.plan(inst, p=1, model="summa2d")
+    exe = handle.compile()
+    av, bv = a[inst.a.coo()], b[inst.b.coo()]
+    got = exe(av, bv)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
+    packed = exe.pack(av, bv)
+    n0 = runtime.trace_count()
+    for _ in range(10):
+        out = exe.runtime(*packed)
+    jax.block_until_ready(out)
+    assert runtime.trace_count() == n0, "summa executor retraced on value-only calls"
+
+
+@pytest.mark.parametrize("devices", [4, 8])
+def test_summa_executes_multidev(devices):
+    """Oracle + measured == closed-form + every (pr, pc) factorization of p
+    on forced host devices (the flattened all_to_all is mesh-shape
+    independent — see case_summa)."""
+    assert f"OK summa p={devices}" in _run("summa", devices=devices)
